@@ -1,0 +1,125 @@
+"""Shared benchmark helpers: engine runners, metric summaries, artifacts."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import AGFTConfig, AGFTTuner
+from repro.energy import A6000
+from repro.serving import EngineConfig, InferenceEngine
+from repro.workloads import (PROTOTYPES, generate_azure_trace,
+                             generate_requests)
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+PAPER_MODEL = "llama3-3b"
+BASE_RATE = 3.0
+
+
+def results_path(name: str) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    return os.path.join(RESULTS_DIR, name)
+
+
+def save_json(name: str, obj) -> str:
+    p = results_path(name)
+    with open(p, "w") as f:
+        json.dump(obj, f, indent=1)
+    return p
+
+
+def load_json(name: str):
+    with open(results_path(name)) as f:
+        return json.load(f)
+
+
+def make_engine(frequency: Optional[float] = None,
+                arch: str = PAPER_MODEL) -> InferenceEngine:
+    eng = InferenceEngine(get_config(arch), EngineConfig(),
+                          hardware=A6000,
+                          initial_frequency=frequency or A6000.f_max)
+    return eng
+
+
+def run_workload(workload: str, *, n_requests: int = 400,
+                 rate: float = BASE_RATE, frequency: Optional[float] = None,
+                 tuner: Optional[AGFTTuner] = None, seed: int = 1,
+                 azure_duration: float = 0.0) -> Dict:
+    eng = make_engine(frequency)
+    if workload == "azure":
+        eng.submit(generate_azure_trace(azure_duration or 1200.0,
+                                        base_rate=rate, seed=seed))
+    else:
+        eng.submit(generate_requests(PROTOTYPES[workload], n_requests,
+                                     base_rate=rate, seed=seed))
+    t0 = time.perf_counter()
+    eng.drain(tuner=tuner)
+    wall = time.perf_counter() - t0
+    fin = eng.finished
+    c = eng.metrics.c
+    tpot = float(np.mean([r.tpot for r in fin if r.tpot is not None]))
+    return {
+        "workload": workload,
+        "frequency": frequency,
+        "finished": len(fin),
+        "energy_j": c.energy_joules_total,
+        "sim_s": eng.clock,
+        "busy_s": c.busy_seconds_total,
+        "iterations": c.iterations_total,
+        "ttft_s": float(np.mean([r.ttft for r in fin])),
+        "tpot_s": tpot,
+        "e2e_s": float(np.mean([r.e2e for r in fin])),
+        "edp": c.energy_joules_total * tpot,
+        "avg_power_w": c.energy_joules_total / max(eng.clock, 1e-9),
+        "prefix_hit_rate": eng.kv.stats.hit_rate,
+        "host_wall_s": wall,
+        "host_us_per_iteration": 1e6 * wall / max(c.iterations_total, 1),
+        "engine": eng,
+    }
+
+
+def strip_engine(row: Dict) -> Dict:
+    return {k: v for k, v in row.items() if k != "engine"}
+
+
+def sweep_frequencies(workload: str, freqs: List[float], *,
+                      n_requests: int = 150, rate: float = BASE_RATE,
+                      seed: int = 1,
+                      ttft_weight: float = 0.1) -> List[Dict]:
+    """EDP(f) curve; delay = tpot + ttft_weight*ttft (paper's latency mix)."""
+    rows = []
+    for f in freqs:
+        r = run_workload(workload, n_requests=n_requests, rate=rate,
+                         frequency=float(f), seed=seed)
+        r = strip_engine(r)
+        r["delay_s"] = r["tpot_s"] + ttft_weight * r["ttft_s"]
+        r["edp_sweep"] = r["energy_j"] * r["delay_s"]
+        rows.append(r)
+    return rows
+
+
+def two_stage_optimal(workload: str, *, coarse_step: float = 90.0,
+                      fine_step: float = 15.0, fine_half: float = 90.0,
+                      n_requests: int = 150, rate: float = BASE_RATE,
+                      seed: int = 1):
+    """Coarse sweep over the full range, then 15 MHz resolution around the
+    coarse optimum — the paper's offline 'theoretical optimum' procedure at
+    tractable cost."""
+    hw = A6000
+    coarse = list(np.arange(hw.f_min, hw.f_max + 1, coarse_step))
+    rows = sweep_frequencies(workload, coarse, n_requests=n_requests,
+                             rate=rate, seed=seed)
+    best = min(rows, key=lambda r: r["edp_sweep"])
+    lo = max(hw.f_min, best["frequency"] - fine_half)
+    hi = min(hw.f_max, best["frequency"] + fine_half)
+    fine = [f for f in np.arange(lo, hi + 1, fine_step)
+            if abs(f - best["frequency"]) > 1e-9]
+    rows += sweep_frequencies(workload, fine, n_requests=n_requests,
+                              rate=rate, seed=seed)
+    rows.sort(key=lambda r: r["frequency"])
+    best = min(rows, key=lambda r: r["edp_sweep"])
+    return best, rows

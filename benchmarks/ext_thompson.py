@@ -1,0 +1,56 @@
+"""Beyond-paper extension: linear Thompson sampling vs the paper's LinUCB
+exploration, same engine/workloads/convergence machinery."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import make_engine, save_json
+from repro.core import AGFTConfig, AGFTTuner
+from repro.energy import A6000
+from repro.workloads import PROTOTYPES, generate_azure_trace, \
+    generate_requests
+
+
+def _run(strategy: str, workload: str, n=1200, rate=3.0, seed=6,
+         azure_dur=0.0):
+    eng = make_engine()
+    if workload == "azure":
+        eng.submit(generate_azure_trace(azure_dur or 1200.0,
+                                        base_rate=rate, seed=seed))
+    else:
+        eng.submit(generate_requests(PROTOTYPES[workload], n,
+                                     base_rate=rate, seed=seed))
+    tuner = AGFTTuner(A6000, AGFTConfig(strategy=strategy))
+    eng.drain(tuner=tuner)
+    fin = eng.finished
+    tpot = float(np.mean([r.tpot for r in fin if r.tpot is not None]))
+    rewards = [h["reward"] for h in tuner.history if h["reward"] is not None]
+    return {
+        "strategy": strategy,
+        "energy_j": eng.metrics.c.energy_joules_total,
+        "tpot_s": tpot,
+        "edp": eng.metrics.c.energy_joules_total * tpot,
+        "first_converged_round": tuner.first_converged_round,
+        "mean_reward_last50": float(np.mean(rewards[-50:])) if rewards
+        else None,
+        "exploit_fraction": (sum(1 for h in tuner.history if h["converged"])
+                             / max(len(tuner.history), 1)),
+    }
+
+
+def run(quiet: bool = False):
+    out = {}
+    for workload in ("normal", "azure"):
+        rows = [_run(s, workload) for s in ("linucb", "thompson")]
+        out[workload] = rows
+        if not quiet:
+            for r in rows:
+                print(f"{workload:8s} {r['strategy']:9s} "
+                      f"EDP={r['edp']:9.1f} conv@{r['first_converged_round']} "
+                      f"exploit={r['exploit_fraction']:.2f}")
+    save_json("ext_thompson.json", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

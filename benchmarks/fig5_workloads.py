@@ -1,0 +1,36 @@
+"""Paper Fig. 5: performance (TTFT/TPOT) and average power across the five
+workload prototypes at the default (unlocked == f_max) frequency."""
+from __future__ import annotations
+
+from benchmarks.common import run_workload, save_json, strip_engine
+
+WORKLOADS = ["normal", "long_context", "long_generation",
+             "high_concurrency", "high_cache_hit"]
+
+
+def run(n_requests: int = 300, quiet: bool = False):
+    rows = []
+    base = None
+    for w in WORKLOADS:
+        r = strip_engine(run_workload(w, n_requests=n_requests))
+        if w == "normal":
+            base = r
+        rows.append(r)
+    for r in rows:
+        r["ttft_vs_normal_pct"] = 100 * (r["ttft_s"] / base["ttft_s"] - 1)
+        r["tpot_vs_normal_pct"] = 100 * (r["tpot_s"] / base["tpot_s"] - 1)
+        r["power_vs_normal_pct"] = (100 * (r["avg_power_w"]
+                                           / base["avg_power_w"] - 1))
+    save_json("fig5_workloads.json", rows)
+    if not quiet:
+        print(f"{'workload':18s} {'TTFT(s)':>9s} {'TPOT(s)':>9s} "
+              f"{'power(W)':>9s} {'hit':>5s}")
+        for r in rows:
+            print(f"{r['workload']:18s} {r['ttft_s']:9.4f} "
+                  f"{r['tpot_s']:9.5f} {r['avg_power_w']:9.1f} "
+                  f"{r['prefix_hit_rate']:5.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,38 @@
+"""Paper Fig. 6: U-shaped EDP-vs-frequency curves and per-prototype optimal
+frequencies (offline 'theoretical optimum' sweep, two-stage at 15 MHz)."""
+from __future__ import annotations
+
+from benchmarks.common import save_json, two_stage_optimal
+from benchmarks.fig5_workloads import WORKLOADS
+
+# paper Fig. 6 reported optima (MHz) for qualitative comparison
+PAPER_OPTIMA = {"normal": 1230, "long_context": 1395,
+                "long_generation": 1260, "high_concurrency": 1365,
+                "high_cache_hit": 1200}
+
+
+def run(n_requests: int = 120, quiet: bool = False):
+    out = {}
+    for w in WORKLOADS:
+        best, rows = two_stage_optimal(w, n_requests=n_requests)
+        # U-shape check: optimum strictly interior
+        freqs = [r["frequency"] for r in rows]
+        interior = (min(freqs) < best["frequency"] < max(freqs))
+        out[w] = {
+            "optimal_freq": best["frequency"],
+            "optimal_edp": best["edp_sweep"],
+            "interior_optimum": bool(interior),
+            "paper_optimum": PAPER_OPTIMA[w],
+            "curve": [{"f": r["frequency"], "edp": r["edp_sweep"],
+                       "energy_j": r["energy_j"], "delay_s": r["delay_s"]}
+                      for r in rows],
+        }
+        if not quiet:
+            print(f"{w:18s} f*={best['frequency']:6.0f} MHz "
+                  f"(paper {PAPER_OPTIMA[w]}) interior={interior}")
+    save_json("fig6_freq_sweep.json", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,82 @@
+"""Paper Fig. 7: the 7-dimensional workload fingerprints — per-prototype
+mean feature vectors (normalized), pairwise separability, and a 1-NN
+identification accuracy check over held-out windows."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import make_engine, save_json
+from benchmarks.fig5_workloads import WORKLOADS
+from repro.core import FEATURE_NAMES, FeatureExtractor
+from repro.energy.edp import diff_snapshots
+from repro.workloads import PROTOTYPES, generate_requests
+
+
+def collect_windows(workload: str, *, n_requests: int = 300,
+                    rate: float = 3.0, period: float = 0.8,
+                    seed: int = 1) -> np.ndarray:
+    eng = make_engine()
+    eng.submit(generate_requests(PROTOTYPES[workload], n_requests,
+                                 base_rate=rate, seed=seed))
+    fx = FeatureExtractor()
+    xs = []
+    prev = eng.metrics.snapshot()
+    prev_t = eng.clock
+    next_t = period
+    while eng.has_work:
+        eng.step()
+        if eng.clock >= next_t:
+            snap = eng.metrics.snapshot()
+            w = diff_snapshots(prev, snap, max(eng.clock - prev_t, 1e-9))
+            if w.iterations > 0:
+                xs.append(fx(w))
+            prev, prev_t = snap, eng.clock
+            next_t = eng.clock + period
+    return np.array(xs)
+
+
+def run(n_requests: int = 250, quiet: bool = False):
+    data = {w: collect_windows(w, n_requests=n_requests) for w in WORKLOADS}
+    # normalized mean fingerprints (per-dimension max across prototypes = 1)
+    means = {w: x.mean(axis=0) for w, x in data.items()}
+    M = np.array([means[w] for w in WORKLOADS])
+    denom = np.maximum(M.max(axis=0), 1e-9)
+    fingerprints = {w: (means[w] / denom).round(3).tolist()
+                    for w in WORKLOADS}
+    # separability: pairwise L2 on normalized means
+    dists = {}
+    for i, a in enumerate(WORKLOADS):
+        for b in WORKLOADS[i + 1:]:
+            dists[f"{a}|{b}"] = float(np.linalg.norm(
+                (means[a] - means[b]) / denom))
+    # 1-NN identification on held-out windows (seed=2)
+    test = {w: collect_windows(w, n_requests=120, seed=2) for w in WORKLOADS}
+    correct = total = 0
+    centroids = {w: means[w] / denom for w in WORKLOADS}
+    for w, xs in test.items():
+        for x in xs:
+            xn = x / denom
+            pred = min(centroids, key=lambda c: np.linalg.norm(
+                xn - centroids[c]))
+            correct += int(pred == w)
+            total += 1
+    acc = correct / max(total, 1)
+    out = {"feature_names": list(FEATURE_NAMES),
+           "fingerprints": fingerprints,
+           "pairwise_distance": dists,
+           "min_pairwise_distance": min(dists.values()),
+           "nn_identification_accuracy": acc}
+    save_json("fig7_fingerprint.json", out)
+    if not quiet:
+        print("fingerprints (normalized):")
+        hdr = " ".join(f"{n[:9]:>10s}" for n in FEATURE_NAMES)
+        print(f"{'workload':18s} {hdr}")
+        for w in WORKLOADS:
+            row = " ".join(f"{v:10.2f}" for v in fingerprints[w])
+            print(f"{w:18s} {row}")
+        print(f"1-NN window identification accuracy: {acc:.2%}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,93 @@
+"""Roofline analysis (deliverable g): per (arch x shape) on the single-pod
+mesh, derive the three roofline terms from the compiled dry-run artifact:
+
+    compute    = HLO_FLOPs / (chips x peak_FLOP/s)
+    memory     = HLO_bytes / (chips x HBM_bw)
+    collective = collective_bytes / (chips x link_bw)
+
+HLO_FLOPs/bytes use the depth-extrapolated per-device costs (XLA costs a
+scan body once; see dryrun --cost-extrapolate). cost_analysis is already
+per-partition (per-device), so `chips` divides only the collective term,
+whose bytes are whole-program.
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+from benchmarks.common import results_path, save_json
+from repro.configs import config_for_shape, get_shape
+from repro.energy import active_param_count
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+DRYRUN_JSON = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "dryrun_full.json")
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """Analytical MODEL_FLOPS: 6*N_active*D for train (fwd+bwd), 2*N_active*D
+    for prefill, 2*N_active*B for one decode step (2mnk convention)."""
+    cfg = config_for_shape(arch, shape_name)
+    shape = get_shape(shape_name)
+    n = active_param_count(cfg)
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch        # decode: one token per seq
+
+
+def analyse(row: Dict) -> Dict:
+    chips = row["devices"]
+    ex = row.get("extrapolated") or {}
+    flops = ex.get("flops", row["flops"])            # per-device
+    mem_bytes = ex.get("bytes_accessed", row["bytes_accessed"])
+    coll = ex.get("collective_bytes", row["collective_bytes"])["total"]
+
+    t_compute = flops / PEAK_FLOPS
+    t_memory = mem_bytes / HBM_BW
+    t_collective = coll / (chips * ICI_BW)
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_collective}
+    dominant = max(terms, key=terms.get)
+
+    mf = model_flops(row["arch"], row["shape"])
+    useful = mf / (flops * chips) if flops else 0.0
+    bound = max(terms.values())
+    return {
+        "arch": row["arch"], "shape": row["shape"], "mesh": row["mesh"],
+        **{k: float(v) for k, v in terms.items()},
+        "dominant": dominant.replace("_s", ""),
+        "model_flops": mf,
+        "useful_flops_ratio": useful,
+        "roofline_bound_s": bound,
+        "compute_fraction_of_bound": t_compute / bound if bound else 0.0,
+    }
+
+
+def run(quiet: bool = False) -> List[Dict]:
+    with open(DRYRUN_JSON) as f:
+        data = json.load(f)
+    rows = [r for r in data["results"] if r["mesh"] == "16x16"]
+    out = [analyse(r) for r in rows]
+    save_json("roofline.json", out)
+    if not quiet:
+        print(f"{'arch':24s} {'shape':12s} {'compute':>10s} {'memory':>10s} "
+              f"{'collect':>10s} {'dominant':>10s} {'useful':>7s}")
+        for r in out:
+            print(f"{r['arch']:24s} {r['shape']:12s} "
+                  f"{r['compute_s']:10.3e} {r['memory_s']:10.3e} "
+                  f"{r['collective_s']:10.3e} {r['dominant']:>10s} "
+                  f"{r['useful_flops_ratio']:7.2f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,115 @@
+"""Benchmark harness entry point: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (us_per_call = host wall-time per
+simulated engine iteration or per benchmark call; derived = the benchmark's
+headline metric vs the paper's claim).
+
+  PYTHONPATH=src python -m benchmarks.run            # full suite
+  PYTHONPATH=src python -m benchmarks.run --quick    # reduced sizes
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def _fig5(quick):
+    from benchmarks.fig5_workloads import run
+    rows = run(n_requests=120 if quick else 300, quiet=True)
+    hc = next(r for r in rows if r["workload"] == "high_concurrency")
+    us = sum(r["host_us_per_iteration"] for r in rows) / len(rows)
+    return us, f"high_conc_power={hc['avg_power_w']:.0f}W"
+
+
+def _fig6(quick):
+    from benchmarks.fig6_freq_sweep import run
+    out = run(n_requests=60 if quick else 120, quiet=True)
+    interior = all(v["interior_optimum"] for v in out.values())
+    spread = (max(v["optimal_freq"] for v in out.values())
+              - min(v["optimal_freq"] for v in out.values()))
+    return 0.0, f"interior_optima={interior};spread={spread:.0f}MHz"
+
+
+def _fig7(quick):
+    from benchmarks.fig7_fingerprint import run
+    out = run(n_requests=120 if quick else 250, quiet=True)
+    return 0.0, f"nn_acc={out['nn_identification_accuracy']:.2f}"
+
+
+def _fig11(quick):
+    from benchmarks.fig11_longrun import run
+    out = run(duration=900.0 if quick else 3600.0, quiet=True)
+    return 0.0, (f"energy-{out['energy_saving_pct']:.1f}%;"
+                 f"edp-{out['edp_reduction_pct']:.1f}%")
+
+
+def _tab23(quick):
+    from benchmarks.tab2_3_phases import run
+    out = run(n_requests=800 if quick else 2500, quiet=True)
+    st = out["stable_phase"]["diff_pct"] if out["stable_phase"] else {}
+    return 0.0, (f"stable_energy{st.get('energy', 0):+.1f}%;"
+                 f"stable_edp{st.get('edp', 0):+.1f}%")
+
+
+def _tab45(quick):
+    from benchmarks.tab4_5_ablation import run
+    out = run(n_requests=600 if quick else 1500, quiet=True)
+    t4 = out["tab4_no_grain_vs_full"]["edp"]
+    t5 = out["tab5_no_pruning_vs_full"]["edp"]
+    return 0.0, (f"nograin_edp{t4['mean_diff_pct']:+.1f}%;"
+                 f"nopruning_edp_cv{t5['cv_diff_pct']:+.0f}%")
+
+
+def _tab6(quick):
+    from benchmarks.tab6_optimal_freq import run
+    out = run(n_requests=600 if quick else 1500, quiet=True)
+    return 0.0, f"max_abs_dev={out['max_abs_deviation_pct']:.1f}%"
+
+
+def _roofline(quick):
+    from benchmarks.roofline import run
+    try:
+        rows = run(quiet=True)
+    except FileNotFoundError:
+        return 0.0, "SKIPPED(run launch.dryrun --all first)"
+    dom = {}
+    for r in rows:
+        dom[r["dominant"]] = dom.get(r["dominant"], 0) + 1
+    return 0.0, ";".join(f"{k}={v}" for k, v in sorted(dom.items()))
+
+
+BENCHMARKS = [
+    ("fig5_workload_profiles", _fig5),
+    ("fig6_freq_sweep_optima", _fig6),
+    ("fig7_fingerprints", _fig7),
+    ("fig11_12_longrun_azure", _fig11),
+    ("tab2_3_phase_metrics", _tab23),
+    ("tab4_5_ablations", _tab45),
+    ("tab6_online_vs_offline", _tab6),
+    ("roofline_terms", _roofline),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    for name, fn in BENCHMARKS:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.perf_counter()
+        try:
+            us, derived = fn(args.quick)
+        except Exception as e:  # noqa: BLE001
+            us, derived = 0.0, f"ERROR({str(e)[:80]})"
+        wall = time.perf_counter() - t0
+        if not us:
+            us = 1e6 * wall
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

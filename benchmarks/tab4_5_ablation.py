@@ -1,0 +1,80 @@
+"""Paper Tables 4/5: ablations — disable fine-grained frequency control
+("No-grain") and disable intelligent pruning ("No pruning"); compare means
+and coefficients of variation (CV) of the window metrics."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks.common import make_engine, save_json
+from repro.core import AGFTConfig, AGFTTuner
+from repro.core.pruning import PruningConfig
+from repro.energy import A6000
+from repro.workloads import PROTOTYPES, generate_requests
+
+
+def _run(tcfg: AGFTConfig, n_requests: int, rate: float, seed: int):
+    eng = make_engine()
+    eng.submit(generate_requests(PROTOTYPES["normal"], n_requests,
+                                 base_rate=rate, seed=seed))
+    tuner = AGFTTuner(A6000, tcfg)
+    eng.drain(tuner=tuner)
+    ws = [h for h in tuner.history
+          if h["energy_j"] is not None and h["tpot"] is not None]
+    energy = np.array([h["energy_j"] for h in ws])
+    edp = np.array([h["edp"] for h in ws])
+    tpot = np.array([h["tpot"] for h in ws])
+    fin = eng.finished
+    ttft = np.array([r.ttft for r in fin])
+    e2e = np.array([r.e2e for r in fin])
+
+    def stats(x):
+        m = float(np.mean(x))
+        return {"mean": m, "cv": float(np.std(x) / m) if m else 0.0}
+
+    return {"energy": stats(energy), "edp": stats(edp),
+            "tpot": stats(tpot), "ttft": stats(ttft), "e2e": stats(e2e),
+            "pruned": len(tuner.pruner.permanently_pruned),
+            "n_windows": len(ws)}
+
+
+def run(n_requests: int = 1500, rate: float = 3.0, seed: int = 2,
+        quiet: bool = False):
+    full = _run(AGFTConfig(), n_requests, rate, seed)
+    nograin = _run(AGFTConfig(fine_grained=False), n_requests, rate, seed)
+    nopruning = _run(
+        AGFTConfig(pruning=PruningConfig(enabled=False)),
+        n_requests, rate, seed)
+
+    def diff(a, b, key, field):
+        return 100 * (b[key][field] / a[key][field] - 1) \
+            if a[key][field] else 0.0
+
+    out = {
+        "full": full, "no_grain": nograin, "no_pruning": nopruning,
+        "tab4_no_grain_vs_full": {
+            k: {"mean_diff_pct": diff(full, nograin, k, "mean"),
+                "cv_diff_pct": diff(full, nograin, k, "cv")}
+            for k in ("energy", "edp", "ttft", "tpot", "e2e")},
+        "tab5_no_pruning_vs_full": {
+            k: {"cv_diff_pct": diff(full, nopruning, k, "cv")}
+            for k in ("energy", "edp", "ttft", "tpot", "e2e")},
+        "paper": {
+            "tab4": {"edp_mean": +9.24, "energy_cv": +151, "edp_cv": +34},
+            "tab5": {"edp_cv": +33.1, "tpot_cv": +31.5},
+        },
+    }
+    save_json("tab4_5_ablation.json", out)
+    if not quiet:
+        print("no-grain vs full:   " + " ".join(
+            f"{k}:mean{v['mean_diff_pct']:+.1f}%/cv{v['cv_diff_pct']:+.0f}%"
+            for k, v in out["tab4_no_grain_vs_full"].items()))
+        print("no-pruning vs full: " + " ".join(
+            f"{k}:cv{v['cv_diff_pct']:+.0f}%"
+            for k, v in out["tab5_no_pruning_vs_full"].items()))
+    return out
+
+
+if __name__ == "__main__":
+    run()

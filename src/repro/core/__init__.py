@@ -1,0 +1,14 @@
+from repro.core.features import FEATURE_NAMES, FeatureExtractor, FeatureScales
+from repro.core.linucb import LinUCBArm, LinUCBBank
+from repro.core.page_hinkley import (ConvergenceConfig, ConvergenceDetector,
+                                     PageHinkley)
+from repro.core.pruning import PruningConfig, PruningFramework
+from repro.core.refinement import MixedMaturityRefinement, RefinementConfig
+from repro.core.reward import RewardCalculator, RewardConfig
+from repro.core.tuner import AGFTConfig, AGFTTuner
+
+__all__ = ["FEATURE_NAMES", "FeatureExtractor", "FeatureScales", "LinUCBArm",
+           "LinUCBBank", "ConvergenceConfig", "ConvergenceDetector",
+           "PageHinkley", "PruningConfig", "PruningFramework",
+           "MixedMaturityRefinement", "RefinementConfig", "RewardCalculator",
+           "RewardConfig", "AGFTConfig", "AGFTTuner"]

@@ -1,0 +1,96 @@
+"""Intelligent action-space pruning (paper §4.3, Fig. 9): three cooperating
+mechanisms that shrink the frequency action space so exploration
+concentrates on viable regions.
+
+1. Extreme-frequency instant pruning — early-rounds hard filter: an arm
+   whose mean reward is catastrophically bad (below a hard negative
+   threshold after a minimum number of samples) is removed permanently.
+2. Historical performance pruning — mature-phase statistical filter: an arm
+   sufficiently sampled whose mean EDP trails the best arm's by more than a
+   dynamic tolerance (std of arm means) is removed.
+3. Cascade pruning — physical heuristic: when a pruned frequency lies below
+   half of f_max, every lower frequency is pruned with it (if a moderate
+   clock already can't keep up, slower clocks certainly can't).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Set
+
+import numpy as np
+
+from repro.core.linucb import LinUCBBank
+
+
+@dataclasses.dataclass
+class PruningConfig:
+    enabled: bool = True
+    # extreme pruning
+    early_rounds: int = 60
+    extreme_min_samples: int = 3
+    extreme_reward_threshold: float = -1.2
+    # historical pruning
+    mature_rounds: int = 30
+    historical_min_samples: int = 6
+    historical_tolerance_k: float = 1.0   # tolerance = k * std(mean EDPs)
+    # cascade pruning
+    cascade_fraction_of_fmax: float = 0.5
+    # never shrink below this many arms
+    min_arms: int = 3
+
+
+class PruningFramework:
+    def __init__(self, cfg: PruningConfig, f_max: float):
+        self.cfg = cfg
+        self.f_max = f_max
+        self.permanently_pruned: Set[float] = set()
+        self.log: List[dict] = []
+
+    # ------------------------------------------------------------------
+    def _prune(self, bank: LinUCBBank, f: float, mechanism: str,
+               round_idx: int) -> None:
+        bank.remove(f)
+        self.permanently_pruned.add(f)
+        self.log.append({"round": round_idx, "freq": f,
+                         "mechanism": mechanism})
+
+    def _cascade(self, bank: LinUCBBank, f: float, round_idx: int) -> None:
+        if f >= self.cfg.cascade_fraction_of_fmax * self.f_max:
+            return
+        for g in list(bank.frequencies):
+            if g < f and len(bank.arms) > self.cfg.min_arms:
+                self._prune(bank, g, "cascade", round_idx)
+
+    # ------------------------------------------------------------------
+    def apply(self, bank: LinUCBBank, round_idx: int) -> None:
+        if not self.cfg.enabled:
+            return
+        cfg = self.cfg
+        # 1. extreme instant pruning (early phase only)
+        if round_idx <= cfg.early_rounds:
+            for f in list(bank.frequencies):
+                if len(bank.arms) <= cfg.min_arms:
+                    break
+                arm = bank.arms[f]
+                if (arm.n >= cfg.extreme_min_samples
+                        and arm.mean_reward < cfg.extreme_reward_threshold):
+                    self._prune(bank, f, "extreme", round_idx)
+                    self._cascade(bank, f, round_idx)
+        # 2. historical performance pruning (mature phase)
+        if round_idx >= cfg.mature_rounds:
+            sampled = {f: a for f, a in bank.arms.items()
+                       if a.n >= cfg.historical_min_samples}
+            if len(sampled) >= 2:
+                means = np.array([a.mean_edp for a in sampled.values()])
+                best = float(means.min())
+                tol = cfg.historical_tolerance_k * float(means.std())
+                for f, a in list(sampled.items()):
+                    if len(bank.arms) <= cfg.min_arms:
+                        break
+                    if a.mean_edp > best + tol and a.mean_edp > best * 1.05:
+                        self._prune(bank, f, "historical", round_idx)
+                        self._cascade(bank, f, round_idx)
+
+    def filter_candidates(self, freqs: List[float]) -> List[float]:
+        """Refinement must not resurrect permanently-pruned frequencies."""
+        return [f for f in freqs if f not in self.permanently_pruned]

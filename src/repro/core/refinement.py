@@ -1,0 +1,71 @@
+"""Mixed maturity-based action-space refinement (paper §4.4, Fig. 10).
+
+Periodically re-centers a fine-grained action space (anchor +/- 150 MHz at
+15 MHz steps) around the current best estimate of the optimum:
+
+* Statistical refinement (t < t_mature): anchor = lowest historical mean
+  EDP among sufficiently-sampled arms — trust data, not the immature model.
+* Predictive refinement (t >= t_mature): anchor = argmax LinUCB UCB score
+  for the CURRENT context x_t — trust the mature model, focus exploration
+  where it predicts the highest reward.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core.linucb import LinUCBBank
+from repro.core.pruning import PruningFramework
+
+
+@dataclasses.dataclass
+class RefinementConfig:
+    enabled: bool = True
+    interval: int = 25               # rounds between refinements
+    maturity_threshold: int = 100    # t_mature
+    stat_min_samples: int = 4
+    half_range_mhz: float = 150.0
+    step_mhz: float = 15.0
+
+
+class MixedMaturityRefinement:
+    def __init__(self, cfg: RefinementConfig, f_min: float, f_max: float,
+                 ucb_alpha: float = 1.0):
+        self.cfg = cfg
+        self.f_min = f_min
+        self.f_max = f_max
+        self.ucb_alpha = ucb_alpha
+        self.log: List[dict] = []
+
+    # ------------------------------------------------------------------
+    def _candidate_grid(self, anchor: float) -> List[float]:
+        cfg = self.cfg
+        lo = max(self.f_min, anchor - cfg.half_range_mhz)
+        hi = min(self.f_max, anchor + cfg.half_range_mhz)
+        grid = np.arange(lo, hi + 1e-9, cfg.step_mhz)
+        return [float(round(f, 3)) for f in grid]
+
+    def maybe_refine(self, bank: LinUCBBank, pruner: PruningFramework,
+                     x_t: np.ndarray, round_idx: int) -> Optional[float]:
+        """Returns the anchor if a refinement happened."""
+        cfg = self.cfg
+        if not cfg.enabled or round_idx == 0 or round_idx % cfg.interval:
+            return None
+        if round_idx < cfg.maturity_threshold:
+            anchor = bank.best_historical(cfg.stat_min_samples)
+            mode = "statistical"
+            if anchor is None:
+                return None
+        else:
+            anchor = max(bank.arms,
+                         key=lambda f: bank.arms[f].ucb(x_t, self.ucb_alpha))
+            mode = "predictive"
+        grid = pruner.filter_candidates(self._candidate_grid(anchor))
+        if len(grid) < 3:
+            return None
+        bank.rebuild(grid, warm_from=anchor)
+        self.log.append({"round": round_idx, "anchor": anchor, "mode": mode,
+                         "n_arms": len(grid)})
+        return anchor

@@ -1,0 +1,175 @@
+"""AGFT: the closed-loop adaptive frequency tuner (paper §4, Fig. 8).
+
+Wires the pieces together on the monitor's sampling cadence:
+  metric snapshot -> WindowStats -> (reward for the PREVIOUS action,
+  7-dim context x_t) -> LinUCB update -> pruning -> refinement ->
+  action selection (UCB exploration / greedy exploitation, gated by the
+  Page-Hinkley convergence detector) -> frequency actuation.
+
+The tuner touches the engine ONLY through (a) the metrics snapshot and
+(b) ``set_frequency`` — the non-invasive boundary the paper requires.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core.features import FeatureExtractor, FeatureScales
+from repro.core.linucb import LinUCBBank
+from repro.core.page_hinkley import ConvergenceConfig, ConvergenceDetector
+from repro.core.pruning import PruningConfig, PruningFramework
+from repro.core.refinement import MixedMaturityRefinement, RefinementConfig
+from repro.core.reward import RewardCalculator, RewardConfig
+from repro.energy.edp import diff_snapshots
+from repro.energy.power_model import HardwareSpec
+
+
+@dataclasses.dataclass
+class AGFTConfig:
+    sampling_period_s: float = 0.8         # paper: sub-second window
+    ucb_alpha: float = 0.8
+    ridge: float = 1.0
+    # exploration strategy: "linucb" (paper) | "thompson" (extension)
+    strategy: str = "linucb"
+    thompson_nu: float = 0.3
+    # initial action space: coarse sweep of the full range
+    initial_step_mhz: float = 90.0
+    # ablations
+    fine_grained: bool = True              # False => "No-grain"
+    pruning: PruningConfig = dataclasses.field(default_factory=PruningConfig)
+    refinement: RefinementConfig = dataclasses.field(
+        default_factory=RefinementConfig)
+    convergence: ConvergenceConfig = dataclasses.field(
+        default_factory=ConvergenceConfig)
+    reward: RewardConfig = dataclasses.field(default_factory=RewardConfig)
+    scales: FeatureScales = dataclasses.field(default_factory=FeatureScales)
+
+
+class AGFTTuner:
+    def __init__(self, hardware: HardwareSpec,
+                 cfg: Optional[AGFTConfig] = None):
+        self.hw = hardware
+        self.cfg = cfg or AGFTConfig()
+        if not self.cfg.fine_grained:
+            # "No-grain" ablation: coarse actions, no refinement
+            self.cfg.refinement = dataclasses.replace(
+                self.cfg.refinement, enabled=False)
+            self.cfg.initial_step_mhz = max(self.cfg.initial_step_mhz, 120.0)
+
+        self.features = FeatureExtractor(self.cfg.scales)
+        freqs = list(np.arange(hardware.f_min, hardware.f_max + 1e-9,
+                               self.cfg.initial_step_mhz))
+        if hardware.f_max not in freqs:
+            freqs.append(hardware.f_max)
+        self.bank = LinUCBBank([float(f) for f in freqs],
+                               dim=self.features.dim, ridge=self.cfg.ridge)
+        self.pruner = PruningFramework(self.cfg.pruning, hardware.f_max)
+        self.refiner = MixedMaturityRefinement(
+            self.cfg.refinement, hardware.f_min, hardware.f_max,
+            ucb_alpha=self.cfg.ucb_alpha)
+        self.convergence = ConvergenceDetector(self.cfg.convergence)
+        self.reward_calc = RewardCalculator(self.cfg.reward)
+
+        # closed-loop state
+        self.round = 0
+        self.prev_snapshot = None
+        self.prev_time = 0.0
+        self.prev_action: Optional[float] = None
+        self.prev_context: Optional[np.ndarray] = None
+        self.next_sample = 0.0
+        self.history: List[dict] = []
+
+    # ------------------------------------------------------------------
+    @property
+    def converged(self) -> bool:
+        return self.convergence.converged
+
+    @property
+    def converged_round(self):
+        return self.convergence.converged_round
+
+    @property
+    def first_converged_round(self):
+        return self.convergence.first_converged_round
+
+    # ------------------------------------------------------------------
+    def maybe_act(self, engine) -> Optional[float]:
+        """Called after every engine step; acts when the sampling window
+        has elapsed. Returns the chosen frequency when it acts."""
+        if engine.clock < self.next_sample:
+            return None
+        return self.act(engine)
+
+    def act(self, engine) -> float:
+        now = engine.clock
+        snap = engine.metrics.snapshot()
+        if self.prev_snapshot is None:
+            # first observation: just set up the window and take the floor
+            self.prev_snapshot = snap
+            self.prev_time = now
+            self.next_sample = now + self.cfg.sampling_period_s
+            f0 = self.bank.select_ucb(np.zeros(self.features.dim),
+                                      self.cfg.ucb_alpha)
+            self._actuate(engine, f0, None, None, None)
+            return f0
+
+        window = diff_snapshots(self.prev_snapshot, snap,
+                                max(now - self.prev_time, 1e-9))
+        x_t = self.features(window)
+
+        # 1. credit the previous action
+        reward = None
+        if self.prev_action is not None and self.prev_context is not None:
+            reward = self.reward_calc(window)
+            arm = self.bank.arms.get(self.prev_action)
+            if arm is not None:
+                arm.update(self.prev_context, reward, edp=window.edp)
+            self.convergence.update(reward)
+            self.round += 1
+
+        # 2. prune, refine (refinement only while learning: once converged
+        # the system is in pure exploitation and the action space is frozen;
+        # a Page-Hinkley drift alarm reopens both)
+        self.pruner.apply(self.bank, self.round)
+        if not self.convergence.converged:
+            self.refiner.maybe_refine(self.bank, self.pruner, x_t,
+                                      self.round)
+
+        # 3. select
+        if self.convergence.converged:
+            f = self.bank.select_greedy(x_t)
+            phase = "exploit"
+        elif self.cfg.strategy == "thompson":
+            f = self.bank.select_thompson(x_t, self.cfg.thompson_nu)
+            phase = "explore"
+        else:
+            f = self.bank.select_ucb(x_t, self.cfg.ucb_alpha)
+            phase = "explore"
+
+        # 4. actuate + bookkeeping
+        self.prev_snapshot = snap
+        self.prev_time = now
+        self.next_sample = now + self.cfg.sampling_period_s
+        self._actuate(engine, f, reward, window, phase, x_t)
+        return f
+
+    # ------------------------------------------------------------------
+    def _actuate(self, engine, f: float, reward, window, phase,
+                 x_t: Optional[np.ndarray] = None) -> None:
+        engine.set_frequency(f)
+        self.prev_action = float(f)
+        self.prev_context = (x_t if x_t is not None
+                             else np.zeros(self.features.dim))
+        self.history.append({
+            "t": engine.clock,
+            "freq": float(f),
+            "reward": reward,
+            "edp": window.edp if window else None,
+            "energy_j": window.energy_j if window else None,
+            "tpot": window.effective_tpot if window else None,
+            "phase": phase or "warmup",
+            "n_arms": len(self.bank.arms),
+            "converged": self.convergence.converged,
+        })

@@ -1,0 +1,3 @@
+from repro.data.pipeline import synthetic_token_batches
+
+__all__ = ["synthetic_token_batches"]

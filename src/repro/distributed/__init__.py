@@ -1,0 +1,6 @@
+from repro.distributed.sharding import (batch_pspec, cache_pspecs,
+                                        data_axes, logits_pspec,
+                                        param_pspecs, with_sharding)
+
+__all__ = ["batch_pspec", "cache_pspecs", "data_axes", "logits_pspec",
+           "param_pspecs", "with_sharding"]

@@ -1,0 +1,212 @@
+"""Sharding rules: map model/optimizer/cache pytrees to PartitionSpecs.
+
+Strategy (Megatron-style TP x DP, MoE expert-parallel over the `model`
+axis):
+  * batch axes       -> data axes ("pod","data") when divisible, else None
+  * attention fused-QKV / FFN-in hidden dim, vocab dim -> "model"
+  * attention out / FFN-out contraction dim            -> "model"
+  * expert axis of MoE expert weights                  -> "model" (EP)
+  * KV cache heads / MLA latent rank / SSM heads / LRU width -> "model"
+  * norms, scalars, small vectors -> replicated
+
+Rules are NAME-BASED over pytree paths, so one table covers every family in
+the zoo; stacked (scan) params get a leading unsharded layer axis
+automatically (detected by rank bump).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MODEL_AXIS = "model"
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+# ---------------------------------------------------------------------------
+# rule table: (path substring match, rank) -> spec builder
+# each entry maps the TRAILING dims of the unstacked parameter
+# ---------------------------------------------------------------------------
+
+def _param_rule(name: str, path: str) -> Optional[Tuple[Optional[str], ...]]:
+    """Returns the trailing-dims partition (tuple of axis names/None) for a
+    parameter leaf, or None for full replication."""
+    m = MODEL_AXIS
+    # embeddings / unembeddings
+    if name == "embed":
+        return (m, None)                      # (V, d) vocab-parallel
+    if name == "lm_head":
+        return (None, m)                      # (d, V)
+    # attention projections
+    if name in ("wq", "wk", "wv"):
+        return (None, m)                      # (d, H*hd)
+    if name == "wo":
+        return (m, None)                      # (H*hd, d)
+    # MLA
+    if name == "w_dkv":
+        return (None, None)                   # latent proj small; replicate
+    if name in ("w_uk", "w_uv"):
+        return (None, m)                      # (rank, H*hd)
+    # FFN
+    if name in ("w_in", "w_gate"):
+        if "moe" in path and "shared" not in path:
+            return (m, None, None)            # (E, d, f) expert-parallel
+        if "mixer" in path and "moe" not in path:
+            return (None, m)                  # ssm in_proj (d, X)
+        return (None, m)                      # (d, f)
+    if name == "w_out":
+        if "moe" in path and "shared" not in path:
+            return (m, None, None)            # (E, f, d)
+        return (m, None)                      # (f, d)
+    if name == "router":
+        return None                           # replicate (tiny, all-to-all)
+    # hybrid RG-LRU
+    if name in ("w_x", "w_y"):
+        return (None, m)                      # (d, W)
+    if name in ("w_input_gate", "w_rec_gate"):
+        return (None, m)                      # (W, W) shard output dim
+    # convs / per-channel vectors: shard the channel (lane) dim
+    if name == "conv_w":
+        return (None, m)                      # (k, channels)
+    if name in ("lambda_param", "norm_w"):
+        return None                           # small; replicate
+    return None
+
+
+def _spec_for_leaf(path_str: str, ndim: int,
+                   expected_extra: int) -> P:
+    parts = [p for p in path_str.split("/") if p]
+    name = parts[-1] if parts else ""
+    rule = _param_rule(name, path_str)
+    if rule is None:
+        return P()
+    lead = ndim - len(rule)
+    if lead < 0:
+        return P()
+    return P(*([None] * lead + list(rule)))
+
+
+def _path_to_str(path) -> str:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+        elif hasattr(k, "name"):
+            out.append(str(k.name))
+    return "/".join(out)
+
+
+def sanitize_spec(spec: P, shape, mesh: Mesh) -> P:
+    """Drop sharding on any dim the mesh axes do not divide (explicit
+    in_shardings require exact divisibility, unlike GSPMD-internal
+    propagation which pads)."""
+    out = []
+    for i, entry in enumerate(list(spec) + [None] * (len(shape) - len(spec))):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        out.append(entry if shape[i] % size == 0 and shape[i] >= size
+                   else None)
+    return P(*out)
+
+
+def param_pspecs(params: Any, mesh: Optional[Mesh] = None) -> Any:
+    """PartitionSpec tree matching ``params`` (works on SDS trees too)."""
+    def one(path, leaf):
+        spec = _spec_for_leaf(_path_to_str(path), len(leaf.shape), 0)
+        return sanitize_spec(spec, leaf.shape, mesh) if mesh is not None \
+            else spec
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+# ---------------------------------------------------------------------------
+# caches & activations
+# ---------------------------------------------------------------------------
+
+def cache_pspecs(cache: Any, mesh: Mesh, global_batch: int) -> Any:
+    """Decode-cache specs. Heads/latent/width dims go to `model`; the batch
+    dim goes to the data axes when divisible (else replicated — e.g. the
+    batch=1 long-context shape)."""
+    da = data_axes(mesh)
+    dp = int(jax.numpy.prod(jax.numpy.array(
+        [mesh.shape[a] for a in da]))) if da else 1
+    batch_spec = da if (da and global_batch % dp == 0
+                        and global_batch >= dp) else None
+    m = MODEL_AXIS
+
+    def one(path, leaf):
+        ps = _path_to_str(path)
+        nd = len(leaf.shape)
+        # identify the stacked-layer leading axis by convention: caches are
+        # built stacked, so rank>=3 arrays start with (L, B, ...) except
+        # prefix/tail lists whose leaves start with (B, ...).
+        stacked = any(s in ps for s in ("scanned", "units", "self",
+                                        "cross_k", "cross_v")) \
+            and "prefix" not in ps and "tail" not in ps
+        lead = [None] if stacked else []
+        body = [batch_spec]
+        rest = nd - len(lead) - 1
+        mdl = mesh.shape[m]
+        shape = leaf.shape
+        off = len(lead) + 1                    # index of first body dim
+        if "c_kv" in ps:                       # (.., T, rank)
+            body += [None] * (rest - 1) + [m]
+        elif "k_rope" in ps:                   # (.., T, rope_dim) small
+            body += [None] * rest
+        elif "ssm" in ps and rest == 3:        # (H, P, N)
+            body += [m, None, None]
+        elif ps.endswith("conv") or "conv" in ps.split("/")[-1]:
+            body += [None] * (rest - 1) + [m]  # (k-1, channels)
+        elif ps.endswith("h"):                 # LRU state (B, W)
+            body += [None] * (rest - 1) + [m]
+        elif rest == 3:                        # KV cache (T, Hkv, D)
+            hkv = shape[off + 1]
+            T = shape[off]
+            if hkv % mdl == 0:
+                body += [None, m, None]        # head-parallel
+            elif T % mdl == 0:
+                body += [m, None, None]        # context-parallel fallback
+            else:
+                body += [None, None, None]
+        else:
+            body += [None] * rest
+        return sanitize_spec(P(*(lead + body)), shape, mesh)
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def batch_pspec(mesh: Mesh, global_batch: int, extra_dims: int = 1) -> P:
+    da = data_axes(mesh)
+    dp = 1
+    for a in da:
+        dp *= mesh.shape[a]
+    if da and global_batch % dp == 0 and global_batch >= dp:
+        return P(da, *([None] * extra_dims))
+    return P(None, *([None] * extra_dims))
+
+
+def logits_pspec(mesh: Mesh, global_batch: int,
+                 vocab_size: Optional[int] = None) -> P:
+    bs = batch_pspec(mesh, global_batch, extra_dims=0)
+    vocab_axis = MODEL_AXIS
+    if vocab_size is not None and vocab_size % mesh.shape[MODEL_AXIS]:
+        vocab_axis = None                      # e.g. whisper's 51865
+    return P(bs[0] if len(bs) else None, None, vocab_axis)
+
+
+def with_sharding(tree: Any, specs: Any, mesh: Mesh) -> Any:
+    """Attach NamedShardings to a ShapeDtypeStruct tree (for .lower())."""
+    return jax.tree.map(
+        lambda sds, spec: jax.ShapeDtypeStruct(
+            sds.shape, sds.dtype, sharding=NamedSharding(mesh, spec)),
+        tree, specs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))

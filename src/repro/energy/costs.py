@@ -1,0 +1,130 @@
+"""Analytical per-iteration FLOP/byte costs for a model config.
+
+Used by the simulated execution backend (engine iterations) and cross-checked
+against the XLA-compiled cost_analysis in the roofline benchmarks.
+"""
+from __future__ import annotations
+
+from repro.models.common import ModelConfig
+
+
+def param_count(cfg: ModelConfig) -> float:
+    """Total parameters (approximate, matmul weights dominate)."""
+    d = cfg.d_model
+    emb = cfg.vocab_size * d * (1 if cfg.tie_embeddings else 2)
+    per_layer = 0.0
+    if cfg.arch_type == "ssm":
+        conv_dim = cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+        per_layer = (d * (2 * cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+                          + cfg.ssm_nheads)
+                     + cfg.conv_kernel * conv_dim + cfg.d_inner * d)
+        return emb + cfg.num_layers * per_layer
+    # attention weights
+    if cfg.use_mla:
+        qk_dim = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+        attn_p = (d * cfg.num_heads * qk_dim
+                  + d * (cfg.kv_lora_rank + cfg.qk_rope_head_dim)
+                  + cfg.kv_lora_rank * cfg.num_heads
+                  * (cfg.qk_nope_head_dim + cfg.v_head_dim)
+                  + cfg.num_heads * cfg.v_head_dim * d)
+    else:
+        attn_p = (d * cfg.num_heads * cfg.head_dim
+                  + 2 * d * cfg.num_kv_heads * cfg.head_dim
+                  + cfg.num_heads * cfg.head_dim * d)
+    # ffn weights
+    gate_mult = 3 if cfg.ffn_activation in ("swiglu", "geglu") else 2
+    if cfg.num_experts:
+        e_ff = cfg.moe_d_ff or cfg.d_ff
+        ffn_p = cfg.num_experts * 3 * d * e_ff \
+            + cfg.num_shared_experts * 3 * d * e_ff
+        dense_ffn_p = gate_mult * d * cfg.d_ff
+        n_moe = cfg.num_layers - cfg.first_k_dense
+        total_layers = n_moe * (attn_p + ffn_p) \
+            + cfg.first_k_dense * (attn_p + dense_ffn_p)
+        return emb + total_layers
+    if cfg.arch_type == "hybrid":
+        rec_p = (2 * d * cfg.lru_width + 2 * cfg.lru_width ** 2
+                 + cfg.lru_width * d)
+        attn_frac = (cfg.block_pattern or ("rec", "rec", "attn")).count(
+            "attn") / len(cfg.block_pattern or ("rec", "rec", "attn"))
+        mix_p = attn_frac * attn_p + (1 - attn_frac) * rec_p
+        per_layer = mix_p + gate_mult * d * cfg.d_ff
+        return emb + cfg.num_layers * per_layer
+    per_layer = attn_p + gate_mult * d * cfg.d_ff
+    n_dec = cfg.num_layers
+    total = emb + n_dec * per_layer
+    if cfg.is_encoder_decoder:
+        enc_layer = attn_p + gate_mult * d * cfg.d_ff
+        cross_p = attn_p
+        total += cfg.encoder_layers * enc_layer + n_dec * cross_p
+    return total
+
+
+def active_param_count(cfg: ModelConfig) -> float:
+    """Parameters touched per token (MoE: only routed top-k + shared)."""
+    if not cfg.num_experts:
+        return param_count(cfg)
+    d = cfg.d_model
+    e_ff = cfg.moe_d_ff or cfg.d_ff
+    dense = param_count(cfg.replace(num_experts=0, num_shared_experts=0,
+                                    first_k_dense=0, d_ff=1))
+    n_moe = cfg.num_layers - cfg.first_k_dense
+    active_ffn = (cfg.top_k + cfg.num_shared_experts) * 3 * d * e_ff
+    gate_mult = 3
+    return (dense + n_moe * active_ffn
+            + cfg.first_k_dense * gate_mult * d * cfg.d_ff)
+
+
+def kv_bytes_per_token_layer(cfg: ModelConfig, bytes_per_el: int = 2) -> float:
+    """KV-cache bytes appended per token per attention layer."""
+    if cfg.use_mla:
+        return (cfg.kv_lora_rank + cfg.qk_rope_head_dim) * bytes_per_el
+    return 2 * cfg.num_kv_heads * cfg.head_dim * bytes_per_el
+
+
+def attention_layers(cfg: ModelConfig) -> float:
+    if cfg.arch_type == "ssm":
+        return 0.0
+    if cfg.arch_type == "hybrid":
+        pat = cfg.block_pattern or ("rec", "rec", "attn")
+        return cfg.num_layers * pat.count("attn") / len(pat)
+    return cfg.num_layers
+
+
+def iteration_cost(cfg: ModelConfig, *, prefill_tokens: int,
+                   decode_seqs: int, avg_context: float,
+                   cached_prefill_tokens: int = 0,
+                   bytes_per_el: int = 2):
+    """(flops, mem_bytes) for one continuous-batching iteration.
+
+    prefill_tokens: NEW prompt tokens processed this iteration (prefix-cache
+    hits excluded); decode_seqs: sequences generating one token each;
+    avg_context: mean KV length the decode tokens attend to.
+    """
+    n_active = active_param_count(cfg)
+    n_total = param_count(cfg)
+    attn_l = attention_layers(cfg)
+    d_attn = cfg.num_heads * cfg.head_dim
+    window = cfg.attention_window or 0
+
+    tokens = prefill_tokens + decode_seqs
+    flops = 2.0 * n_active * tokens
+    # attention score/value FLOPs: 4 * d_attn * context per token per layer
+    eff_ctx = min(avg_context, window) if window else avg_context
+    flops += 4.0 * d_attn * attn_l * (
+        prefill_tokens * max(eff_ctx, 1.0) * 0.5    # causal triangle
+        + decode_seqs * max(eff_ctx, 1.0))
+
+    # memory: weights stream once per iteration (batched reuse), KV traffic
+    kv_l = kv_bytes_per_token_layer(cfg, bytes_per_el) * attn_l
+    mem = n_active * bytes_per_el                      # weight reads
+    mem += tokens * kv_l                               # cache writes
+    mem += decode_seqs * kv_l * max(eff_ctx, 1.0)      # decode cache reads
+    mem += prefill_tokens * kv_l * 0.1                 # prefill reread (flash)
+    # ssm state traffic
+    if cfg.arch_type in ("ssm", "hybrid"):
+        state = cfg.ssm_nheads * cfg.ssm_head_dim * cfg.ssm_state * 4 \
+            if cfg.arch_type == "ssm" else cfg.lru_width * 4
+        mem += decode_seqs * state * cfg.num_layers
+    del n_total
+    return flops, mem

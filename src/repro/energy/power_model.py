@@ -1,0 +1,136 @@
+"""Analytical DVFS latency/power model — the physics layer of the simulated
+serving environment (the paper evaluates in "an environment simulating
+realistic, fluctuating inference requests"; this is ours, see DESIGN.md §2).
+
+Latency: an iteration splits into a compute-bound part that scales ~1/f and
+a memory-bound part that is frequency-insensitive (GDDR/HBM clocks are not
+tied to the core clock). Power: classic CMOS decomposition
+P = P_idle + P_static_active + P_dyn_compute·u_c·(f/f_max)^alpha
+              + P_dyn_memory·u_m,
+with alpha≈3 (V roughly tracks f). These two facts alone reproduce the
+paper's phenomenology: U-shaped EDP-vs-frequency curves whose minimum sits
+high for compute-bound workloads (prefill-heavy, high-concurrency) and low
+for memory-bound ones (decode-heavy, cache-hit-heavy).
+
+Two calibrations ship: the A6000 set (used for the faithful reproduction so
+learned optima land in the paper's 1200-1410 MHz band) and a TPU-v5e set
+(the deployment target; "frequency" is the virtualized power-state knob,
+DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    name: str
+    f_min: float                 # MHz
+    f_max: float                 # MHz
+    f_step: float                # MHz (native grid granularity)
+    peak_flops: float            # FLOP/s at f_max (half precision)
+    mem_bw: float                # bytes/s
+    p_idle: float                # W, device powered but idle
+    p_static_active: float       # W, clock-tree/leakage when busy
+    p_dyn_compute: float         # W, dynamic compute power at f_max, u=1
+    p_dyn_memory: float          # W, memory-subsystem power at full bw
+    alpha: float = 3.0           # dynamic power exponent
+    iteration_overhead_s: float = 3.0e-4   # launch/scheduling per iteration
+    # Achievable memory bandwidth vs core clock has a KNEE: flat at full
+    # bandwidth above bw_knee*f_max (DMA/L2 keep up), dropping as a power
+    # law below it (address-generation / issue-rate limited). This is what
+    # pins decode-heavy (memory-bound) EDP optima at moderate frequencies
+    # (paper Fig. 6: Long-Generation's optimum is 1260 MHz, not 210) while
+    # costing almost no TPOT at the optimum (paper Table 3: +7.1%).
+    #   bw_eff = bw * min(1, (fr/bw_knee)^bw_beta)
+    bw_knee: float = 0.65
+    bw_beta: float = 0.9
+    # Compute throughput saturates near the top of the V/F curve (issue
+    # limits, memory interleave): effective throughput = fr for fr<=knee,
+    # then knee + slope*(fr-knee). This is why measured EDP optima for
+    # compute-bound LLM serving sit at ~0.75-0.78 f_max (paper Fig. 6:
+    # 1365-1410 of 1800 MHz), never at f_max.
+    perf_knee: float = 0.78
+    perf_slope_above_knee: float = 0.25
+
+    def frequencies(self) -> List[float]:
+        out, f = [], self.f_min
+        while f <= self.f_max + 1e-9:
+            out.append(round(f, 3))
+            f += self.f_step
+        return out
+
+
+# Calibrated so that (i) peak busy power ~ board TDP, (ii) the compute-bound
+# EDP optimum lands near 0.75-0.78 f_max (paper Fig. 6: 1365-1410 MHz of
+# 1800), (iii) baseline serving power for Llama-3-3B-class load sits in the
+# paper's observed 180-240 W band.
+A6000 = HardwareSpec(
+    name="NVIDIA-A6000",
+    f_min=210.0, f_max=1800.0, f_step=15.0,
+    peak_flops=155e12,           # bf16/fp16 tensor-core peak
+    mem_bw=768e9,                # GDDR6
+    p_idle=25.0,
+    p_static_active=38.0,
+    p_dyn_compute=185.0,
+    p_dyn_memory=52.0,
+    alpha=3.0,
+)
+
+# TPU v5e: "frequency" = virtualized power-state multiplier (DESIGN.md §2);
+# grid mirrors the roofline constants given in the assignment.
+TPU_V5E = HardwareSpec(
+    name="TPU-v5e",
+    f_min=0.25 * 1_000, f_max=1_000.0, f_step=25.0,   # normalized milli-units
+    peak_flops=197e12,
+    mem_bw=819e9,
+    p_idle=60.0,
+    p_static_active=40.0,
+    p_dyn_compute=140.0,
+    p_dyn_memory=60.0,
+    alpha=3.0,
+)
+
+
+class DVFSModel:
+    """Maps (work, frequency) -> (latency, energy) for one engine iteration."""
+
+    def __init__(self, spec: HardwareSpec):
+        self.spec = spec
+
+    def iteration_time_power(self, flops: float, mem_bytes: float,
+                             f_mhz: float) -> Tuple[float, float]:
+        """Returns (seconds, watts) for one iteration of the given work."""
+        sp = self.spec
+        fr = min(max(f_mhz / sp.f_max, 1e-3), 1.0)
+        # effective compute throughput with top-of-curve saturation
+        if fr <= sp.perf_knee:
+            thr = fr
+        else:
+            thr = sp.perf_knee + sp.perf_slope_above_knee * (fr - sp.perf_knee)
+        t_comp = flops / (sp.peak_flops * thr) if flops > 0 else 0.0
+        bw_factor = min(1.0, (fr / sp.bw_knee) ** sp.bw_beta)
+        t_mem = mem_bytes / (sp.mem_bw * bw_factor) if mem_bytes > 0 else 0.0
+        # compute and memory pipelines overlap; overhead does not
+        t_busy = max(t_comp, t_mem)
+        t = t_busy + sp.iteration_overhead_s
+        if t_busy <= 0.0:
+            return t, sp.p_idle
+        u_busy = t_busy / t
+        u_mem = t_mem / t
+        # SMs draw near-full dynamic power whenever busy (paper Fig. 1:
+        # decode ~300 W vs prefill 280-325 W on A800) — power scales with
+        # the clock cube, NOT with FLOP utilization.
+        p = (sp.p_idle + sp.p_static_active * u_busy
+             + sp.p_dyn_compute * u_busy * fr ** sp.alpha
+             + sp.p_dyn_memory * u_mem)
+        return t, p
+
+    def iteration_time_energy(self, flops: float, mem_bytes: float,
+                              f_mhz: float) -> Tuple[float, float]:
+        t, p = self.iteration_time_power(flops, mem_bytes, f_mhz)
+        return t, p * t
+
+    def idle_energy(self, seconds: float) -> float:
+        return self.spec.p_idle * seconds

@@ -1,0 +1,102 @@
+"""Pure-jnp oracles for every Pallas kernel. These are the ground truth the
+kernel sweep tests assert against, and the execution path used on CPU
+(dry-runs, benchmarks) where the TPU kernels would run in interpret mode.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    *, causal: bool = True) -> jnp.ndarray:
+    """q: (B,S,H,D); k,v: (B,S,Hkv,D) -> (B,S,H,D). GQA by head grouping."""
+    B, S, H, D = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, S, Hkv, G, D).astype(jnp.float32)
+    scores = jnp.einsum("bshgd,bthd->bhgst", qg, k.astype(jnp.float32))
+    scores = scores * (D ** -0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgst,bthd->bshgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, S, H, D).astype(q.dtype)
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray,
+                     valid: jnp.ndarray) -> jnp.ndarray:
+    """q: (B,1,H,D); caches (B,T,Hkv,D); valid (B,T) bool -> (B,1,H,D)."""
+    B, _, H, D = q.shape
+    T, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, D).astype(jnp.float32)
+    scores = jnp.einsum("bhgd,bthd->bhgt", qg,
+                        k_cache.astype(jnp.float32)) * (D ** -0.5)
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgt,bthd->bhgd", probs, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
+def rglru_scan(x: jnp.ndarray, log_a: jnp.ndarray,
+               h0: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """h_t = a_t h_{t-1} + sqrt(1-a_t^2) x_t. x, log_a (B,S,W); h0 (B,W)."""
+    a = jnp.exp(log_a.astype(jnp.float32))
+    gated = jnp.sqrt(jnp.clip(1.0 - a * a, 1e-9, 1.0)) * x.astype(jnp.float32)
+
+    def step(h, inp):
+        at, gt = inp
+        h = at * h + gt
+        return h, h
+
+    h_last, ys = jax.lax.scan(
+        step, h0.astype(jnp.float32),
+        (jnp.moveaxis(a, 1, 0), jnp.moveaxis(gated, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1), h_last
+
+
+def ssd_scan(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+             B: jnp.ndarray, C: jnp.ndarray, *, chunk: int
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sequential-state-space oracle for the SSD kernel (token-by-token).
+
+    x (b,s,h,p); dt (b,s,h); A (h,); B,C (b,s,g,n).
+    Returns (y (b,s,h,p), final_state (b,h,p,n)).
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    Br = jnp.repeat(B, rep, axis=2).astype(jnp.float32)
+    Cr = jnp.repeat(C, rep, axis=2).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+
+    def step(state, inp):
+        xt, dtt, Bt, Ct = inp                               # (b,h,p),(b,h),(b,h,n)
+        decay = jnp.exp(-dtt * A[None])[..., None, None]    # (b,h,1,1)
+        upd = dtt[..., None, None] * jnp.einsum("bhn,bhp->bhpn", Bt, xt)
+        state = decay * state + upd
+        y = jnp.einsum("bhn,bhpn->bhp", Ct, state)
+        return state, y
+
+    init = jnp.zeros((b, h, p, n), jnp.float32)
+    final, ys = jax.lax.scan(
+        step, init,
+        (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+         jnp.moveaxis(Br, 1, 0), jnp.moveaxis(Cr, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1), final
+
+
+def rmsnorm(x: jnp.ndarray, weight: jnp.ndarray,
+            *, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)
+            * weight.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,2 @@
+# NOTE: do not import dryrun here — it sets XLA_FLAGS at import time and is
+# meant to be run as a standalone entry point.

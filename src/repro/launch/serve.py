@@ -1,0 +1,107 @@
+"""Serving driver: run the continuous-batching engine under a workload with
+or without the AGFT tuner.
+
+  python -m repro.launch.serve --arch llama3-3b --workload normal \
+      --requests 2000 --tuner agft
+  python -m repro.launch.serve --arch llama3-3b --workload azure \
+      --duration 3600 --tuner none
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import AGFTConfig, AGFTTuner
+from repro.energy import A6000, TPU_V5E
+from repro.serving import EngineConfig, InferenceEngine
+from repro.workloads import (PROTOTYPES, generate_azure_trace,
+                             generate_requests)
+
+HARDWARE = {"a6000": A6000, "tpu-v5e": TPU_V5E}
+
+
+def build_engine(arch: str, hardware_name: str = "a6000",
+                 engine_cfg: EngineConfig = None) -> InferenceEngine:
+    hw = HARDWARE[hardware_name]
+    return InferenceEngine(get_config(arch), engine_cfg or EngineConfig(),
+                           hardware=hw, initial_frequency=hw.f_max)
+
+
+def summarize(engine: InferenceEngine, tuner=None) -> dict:
+    fin = engine.finished
+    c = engine.metrics.c
+    ttft = float(np.mean([r.ttft for r in fin])) if fin else 0.0
+    tpot = float(np.mean([r.tpot for r in fin
+                          if r.tpot is not None])) if fin else 0.0
+    e2e = float(np.mean([r.e2e for r in fin])) if fin else 0.0
+    out = {
+        "finished": len(fin),
+        "energy_j": c.energy_joules_total,
+        "wall_s": engine.clock,
+        "busy_s": c.busy_seconds_total,
+        "ttft_s": ttft,
+        "tpot_s": tpot,
+        "e2e_s": e2e,
+        "edp": c.energy_joules_total * tpot,
+        "prefix_hit_rate": engine.kv.stats.hit_rate,
+        "preemptions": engine.kv.stats.preemptions,
+        "avg_power_w": (c.energy_joules_total / engine.clock
+                        if engine.clock else 0.0),
+    }
+    if tuner is not None:
+        out["tuner"] = {
+            "rounds": tuner.round,
+            "converged_round": tuner.converged_round,
+            "reopened": tuner.convergence.reopened,
+            "pruned": len(tuner.pruner.permanently_pruned),
+            "refinements": len(tuner.refiner.log),
+            "arms": len(tuner.bank.arms),
+        }
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-3b")
+    ap.add_argument("--hardware", default="a6000",
+                    choices=list(HARDWARE))
+    ap.add_argument("--workload", default="normal",
+                    choices=list(PROTOTYPES) + ["azure"])
+    ap.add_argument("--requests", type=int, default=2000)
+    ap.add_argument("--duration", type=float, default=0.0,
+                    help="azure trace duration (sim seconds)")
+    ap.add_argument("--rate", type=float, default=3.0)
+    ap.add_argument("--tuner", default="agft", choices=["agft", "none"])
+    ap.add_argument("--frequency", type=float, default=0.0,
+                    help="fixed frequency for --tuner none (0 = f_max)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="")
+    args = ap.parse_args()
+
+    eng = build_engine(args.arch, args.hardware)
+    if args.workload == "azure":
+        dur = args.duration or 3600.0
+        eng.submit(generate_azure_trace(dur, base_rate=args.rate,
+                                        seed=args.seed))
+    else:
+        eng.submit(generate_requests(PROTOTYPES[args.workload],
+                                     args.requests, base_rate=args.rate,
+                                     seed=args.seed))
+    tuner = None
+    if args.tuner == "agft":
+        tuner = AGFTTuner(HARDWARE[args.hardware], AGFTConfig())
+    elif args.frequency:
+        eng.set_frequency(args.frequency)
+    eng.drain(tuner=tuner)
+    summary = summarize(eng, tuner)
+    print(json.dumps(summary, indent=1))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(summary, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,227 @@
+"""Whisper-style encoder-decoder backbone. [arXiv:2212.04356]
+
+The mel-spectrogram + conv feature extractor is a STUB per the assignment:
+``forward``/``prefill`` consume precomputed frame embeddings
+(B, encoder_seq, d_model) supplied by ``input_specs``. Everything downstream
+(bidirectional encoder, causal decoder with self+cross attention) is real.
+
+Whisper uses LayerNorm (with bias) and GELU MLPs; positions are fixed
+sinusoids so arbitrary decode lengths lower without extra parameters.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import blocks
+from repro.models.common import (ModelConfig, dense_init, layer_norm,
+                                 scan_layers, sinusoidal_positions,
+                                 softmax_cross_entropy, split_keys)
+
+
+def _init_ln(cfg):
+    return {"w": jnp.ones((cfg.d_model,), cfg.weight_dtype),
+            "b": jnp.zeros((cfg.d_model,), cfg.weight_dtype)}
+
+
+class EncDecLM:
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.is_encoder_decoder
+        self.cfg = cfg
+
+    # ------------------------------------------------------------------
+    def _init_enc_layer(self, key):
+        cfg = self.cfg
+        ka, kf = jax.random.split(key)
+        return {"attn_norm": _init_ln(cfg), "ffn_norm": _init_ln(cfg),
+                "attn": attn.init_attention(ka, cfg),
+                "ffn": blocks.init_ffn(kf, cfg)}
+
+    def _init_dec_layer(self, key):
+        cfg = self.cfg
+        ka, kc, kf = split_keys(key, 3)
+        return {"self_norm": _init_ln(cfg), "cross_norm": _init_ln(cfg),
+                "ffn_norm": _init_ln(cfg),
+                "self_attn": attn.init_attention(ka, cfg),
+                "cross_attn": attn.init_cross_attention(kc, cfg),
+                "ffn": blocks.init_ffn(kf, cfg)}
+
+    def init(self, key) -> Any:
+        cfg = self.cfg
+        ks = split_keys(key, 5)
+        enc_keys = jax.random.split(ks[2], cfg.encoder_layers)
+        dec_keys = jax.random.split(ks[3], cfg.num_layers)
+        return {
+            "embed": dense_init(ks[0], (cfg.vocab_size, cfg.d_model),
+                                cfg.weight_dtype, scale=0.02),
+            "lm_head": dense_init(ks[1], (cfg.d_model, cfg.vocab_size),
+                                  cfg.weight_dtype),
+            "enc_final_norm": _init_ln(cfg),
+            "dec_final_norm": _init_ln(cfg),
+            "enc_layers": jax.vmap(self._init_enc_layer)(enc_keys),
+            "dec_layers": jax.vmap(self._init_dec_layer)(dec_keys),
+        }
+
+    # ------------------------------------------------------------------
+    def encode(self, params, frames: jnp.ndarray) -> jnp.ndarray:
+        """frames: (B, T_enc, d_model) stubbed conv-frontend output."""
+        cfg = self.cfg
+        T = frames.shape[1]
+        pos = sinusoidal_positions(T, cfg.d_model).astype(frames.dtype)
+        x = frames + pos[None]
+
+        def body(h, lp):
+            a = layer_norm(h, lp["attn_norm"]["w"], lp["attn_norm"]["b"])
+            q, k, v = attn._project_qkv(lp["attn"],
+                                        cfg.replace(use_rope=False),
+                                        a, cfg.num_kv_heads)
+            y = attn.gqa_attention(q, k, v, None)  # bidirectional
+            y = y.reshape(h.shape[0], h.shape[1], -1)
+            h = h + y @ lp["attn"]["wo"].astype(y.dtype)
+            f = layer_norm(h, lp["ffn_norm"]["w"], lp["ffn_norm"]["b"])
+            h = h + blocks.ffn_forward(lp["ffn"], cfg, f)
+            return h, 0
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        x, _ = scan_layers(body_fn, x, params["enc_layers"],
+                           unroll=cfg.unroll_layers)
+        return layer_norm(x, params["enc_final_norm"]["w"],
+                          params["enc_final_norm"]["b"])
+
+    # ------------------------------------------------------------------
+    def _dec_layer_full(self, lp, x, positions, enc_k, enc_v,
+                        *, collect_cache, cache_len=None):
+        cfg = self.cfg
+        h = layer_norm(x, lp["self_norm"]["w"], lp["self_norm"]["b"])
+        y, cache = attn.attention_forward(
+            lp["self_attn"], cfg.replace(use_rope=False), h, positions,
+            window=cfg.attention_window, cache_len=cache_len)
+        x = x + y
+        h = layer_norm(x, lp["cross_norm"]["w"], lp["cross_norm"]["b"])
+        x = x + attn.cross_attention(lp["cross_attn"], cfg, h, enc_k, enc_v)
+        h = layer_norm(x, lp["ffn_norm"]["w"], lp["ffn_norm"]["b"])
+        x = x + blocks.ffn_forward(lp["ffn"], cfg, h)
+        return x, (cache if collect_cache else 0)
+
+    def _dec_layer_decode(self, lp, x, self_cache, enc_k, enc_v, pos):
+        cfg = self.cfg
+        h = layer_norm(x, lp["self_norm"]["w"], lp["self_norm"]["b"])
+        y, nc = attn.attention_decode(
+            lp["self_attn"], cfg.replace(use_rope=False), h, self_cache,
+            pos, window=cfg.attention_window)
+        x = x + y
+        h = layer_norm(x, lp["cross_norm"]["w"], lp["cross_norm"]["b"])
+        x = x + attn.cross_attention(lp["cross_attn"], cfg, h, enc_k, enc_v)
+        h = layer_norm(x, lp["ffn_norm"]["w"], lp["ffn_norm"]["b"])
+        x = x + blocks.ffn_forward(lp["ffn"], cfg, h)
+        return x, nc
+
+    def _embed_tokens(self, params, tokens, start_pos=0):
+        cfg = self.cfg
+        x = jnp.take(params["embed"], tokens, axis=0).astype(
+            cfg.activation_dtype)
+        S = tokens.shape[1]
+        pos = sinusoidal_positions(start_pos + S, cfg.d_model)[start_pos:]
+        return x + pos[None].astype(x.dtype)
+
+    def _unembed(self, params, x):
+        x = layer_norm(x, params["dec_final_norm"]["w"],
+                       params["dec_final_norm"]["b"])
+        return x @ params["lm_head"].astype(x.dtype)
+
+    def _cross_kv(self, params, enc_out):
+        cfg = self.cfg
+
+        def body(_, lp):
+            k, v = attn.encoder_kv(lp["cross_attn"], cfg, enc_out)
+            return 0, (k, v)
+
+        _, (ks, vs) = scan_layers(body, 0, params["dec_layers"],
+                                  unroll=cfg.unroll_layers)
+        return ks, vs      # (L, B, T_enc, Hkv, D)
+
+    # ------------------------------------------------------------------
+    def forward(self, params, tokens, frames):
+        """Teacher-forced training forward. tokens (B,S); frames (B,T,d)."""
+        cfg = self.cfg
+        B, S = tokens.shape
+        enc_out = self.encode(params, frames)
+        cross_k, cross_v = self._cross_kv(params, enc_out)
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        x = self._embed_tokens(params, tokens)
+
+        def body(h, inp):
+            lp, (ek, ev) = inp
+            h, _ = self._dec_layer_full(lp, h, positions, ek, ev,
+                                        collect_cache=False)
+            return h, 0
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        x, _ = scan_layers(body_fn, x,
+                           (params["dec_layers"], (cross_k, cross_v)),
+                           unroll=cfg.unroll_layers)
+        return self._unembed(params, x), jnp.zeros((), jnp.float32)
+
+    def loss(self, params, tokens, labels, frames, mask=None):
+        logits, _ = self.forward(params, tokens, frames)
+        return softmax_cross_entropy(logits, labels, mask)
+
+    def prefill(self, params, tokens, frames, max_len=None):
+        cfg = self.cfg
+        B, S = tokens.shape
+        enc_out = self.encode(params, frames)
+        cross_k, cross_v = self._cross_kv(params, enc_out)
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        x = self._embed_tokens(params, tokens)
+
+        def body(h, inp):
+            lp, (ek, ev) = inp
+            h, cache = self._dec_layer_full(lp, h, positions, ek, ev,
+                                            collect_cache=True,
+                                            cache_len=max_len)
+            return h, cache
+
+        x, self_caches = scan_layers(
+            body, x, (params["dec_layers"], (cross_k, cross_v)),
+            unroll=cfg.unroll_layers)
+        logits = self._unembed(params, x[:, -1:])
+        return logits, {"self": self_caches,
+                        "cross_k": cross_k, "cross_v": cross_v}
+
+    def init_cache(self, batch: int, max_len: int):
+        cfg = self.cfg
+        one = attn.init_kv_cache(cfg, batch, max_len)
+        self_c = jax.tree.map(lambda *xs: jnp.stack(xs),
+                              *([one] * cfg.num_layers))
+        z = jnp.zeros((cfg.num_layers, batch, cfg.encoder_seq,
+                       cfg.num_kv_heads, cfg.head_dim),
+                      cfg.activation_dtype)
+        return {"self": self_c, "cross_k": z, "cross_v": z}
+
+    def decode_step(self, params, token, cache, pos):
+        cfg = self.cfg
+        x = jnp.take(params["embed"], token, axis=0).astype(
+            cfg.activation_dtype)
+        # per-example sinusoidal position embedding computed from pos (B,)
+        d = cfg.d_model
+        log_timescale = jnp.log(10000.0) / (d // 2 - 1)
+        inv = jnp.exp(-log_timescale * jnp.arange(d // 2, dtype=jnp.float32))
+        t = pos[:, None].astype(jnp.float32) * inv[None, :]
+        sinus = jnp.concatenate([jnp.sin(t), jnp.cos(t)], axis=-1)
+        x = x + sinus[:, None, :].astype(x.dtype)
+
+        def body(h, inp):
+            lp, sc, ek, ev = inp
+            h, nc = self._dec_layer_decode(lp, h, sc, ek, ev, pos)
+            return h, nc
+
+        x, new_self = scan_layers(
+            body, x, (params["dec_layers"], cache["self"],
+                      cache["cross_k"], cache["cross_v"]),
+            unroll=cfg.unroll_layers)
+        logits = self._unembed(params, x)
+        return logits, {"self": new_self, "cross_k": cache["cross_k"],
+                        "cross_v": cache["cross_v"]}

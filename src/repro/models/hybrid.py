@@ -1,0 +1,195 @@
+"""RecurrentGemma / Griffin hybrid: RG-LRU recurrent blocks + local (MQA,
+windowed) attention at a 1:2 ratio. [arXiv:2402.19427]
+
+Layer layout: units of (rec, rec, attn) are scanned; a trailing remainder
+(38 = 12*3 + 2 -> two recurrent layers) is unrolled. Every layer is a
+residual pair (temporal mixer, GeGLU MLP) with pre-RMSNorm.
+
+Bounded state (LRU state + fixed attention window) => long_500k is native
+sub-quadratic for this family.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import blocks
+from repro.models.common import (ModelConfig, dense_init, rms_norm,
+                                 scan_layers, softmax_cross_entropy,
+                                 split_keys)
+
+
+class HybridLM:
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.lru_width and cfg.local_window
+        self.cfg = cfg
+        pat = cfg.block_pattern or ("rec", "rec", "attn")
+        self.pattern = pat
+        self.n_units = cfg.num_layers // len(pat)
+        self.n_tail = cfg.num_layers - self.n_units * len(pat)
+
+    # ------------------------------------------------------------------
+    def _init_mixer(self, key, kind: str):
+        cfg = self.cfg
+        if kind == "rec":
+            return blocks.init_rglru_block(key, cfg)
+        return attn.init_attention(key, cfg, num_kv=cfg.num_kv_heads)
+
+    def _init_layer(self, key, kind: str):
+        cfg = self.cfg
+        km, kf = jax.random.split(key)
+        return {"temporal_norm": jnp.ones((cfg.d_model,), cfg.weight_dtype),
+                "mlp_norm": jnp.ones((cfg.d_model,), cfg.weight_dtype),
+                "mixer": self._init_mixer(km, kind),
+                "mlp": blocks.init_ffn(kf, cfg)}
+
+    def _init_unit(self, key):
+        ks = split_keys(key, len(self.pattern))
+        return {f"l{i}": self._init_layer(ks[i], kind)
+                for i, kind in enumerate(self.pattern)}
+
+    def init(self, key) -> Any:
+        cfg = self.cfg
+        ks = split_keys(key, 4 + self.n_tail)
+        unit_keys = jax.random.split(ks[2], self.n_units)
+        params = {
+            "embed": dense_init(ks[0], (cfg.vocab_size, cfg.d_model),
+                                cfg.weight_dtype, scale=0.02),
+            "final_norm": jnp.ones((cfg.d_model,), cfg.weight_dtype),
+            "units": jax.vmap(self._init_unit)(unit_keys),
+            "tail": [self._init_layer(ks[4 + i], "rec")
+                     for i in range(self.n_tail)],
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = dense_init(
+                ks[1], (cfg.d_model, cfg.vocab_size), cfg.weight_dtype)
+        return params
+
+    # ------------------------------------------------------------------
+    def _layer_full(self, lp, kind, x, positions, *, collect_cache):
+        cfg = self.cfg
+        h = rms_norm(x, lp["temporal_norm"], cfg.norm_eps, cfg.use_pallas)
+        if kind == "attn":
+            y, cache = attn.attention_forward(
+                lp["mixer"], cfg, h, positions, window=cfg.local_window)
+        else:
+            y, cache = blocks.rglru_block_forward(lp["mixer"], cfg, h)
+        x = x + y
+        h = rms_norm(x, lp["mlp_norm"], cfg.norm_eps, cfg.use_pallas)
+        x = x + blocks.ffn_forward(lp["mlp"], cfg, h)
+        return x, (cache if collect_cache else 0)
+
+    def _layer_decode(self, lp, kind, x, cache, pos):
+        cfg = self.cfg
+        h = rms_norm(x, lp["temporal_norm"], cfg.norm_eps, cfg.use_pallas)
+        if kind == "attn":
+            y, nc = attn.attention_decode(lp["mixer"], cfg, h, cache, pos,
+                                          window=cfg.local_window)
+        else:
+            y, nc = blocks.rglru_block_forward(lp["mixer"], cfg, h,
+                                               state=cache)
+        x = x + y
+        h = rms_norm(x, lp["mlp_norm"], cfg.norm_eps, cfg.use_pallas)
+        x = x + blocks.ffn_forward(lp["mlp"], cfg, h)
+        return x, nc
+
+    def _unit_full(self, up, x, positions, *, collect_cache):
+        caches = {}
+        for i, kind in enumerate(self.pattern):
+            x, c = self._layer_full(up[f"l{i}"], kind, x, positions,
+                                    collect_cache=collect_cache)
+            caches[f"l{i}"] = c
+        return x, caches
+
+    # ------------------------------------------------------------------
+    def _embed(self, params, tokens):
+        return jnp.take(params["embed"], tokens, axis=0).astype(
+            self.cfg.activation_dtype)
+
+    def _unembed(self, params, x):
+        cfg = self.cfg
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps, cfg.use_pallas)
+        head = (params["embed"].T if cfg.tie_embeddings
+                else params["lm_head"])
+        return x @ head.astype(x.dtype)
+
+    def _run(self, params, x, positions, *, collect_cache):
+        cfg = self.cfg
+
+        def body(h, up):
+            h, caches = self._unit_full(up, h, positions,
+                                        collect_cache=collect_cache)
+            return h, caches
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        x, unit_caches = scan_layers(body_fn, x, params["units"],
+                                     unroll=cfg.unroll_layers)
+        tail_caches = []
+        for lp in params["tail"]:
+            x, c = self._layer_full(lp, "rec", x, positions,
+                                    collect_cache=collect_cache)
+            tail_caches.append(c)
+        return x, unit_caches, tail_caches
+
+    def forward(self, params, tokens, positions=None):
+        B, S = tokens.shape
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        x = self._embed(params, tokens)
+        x, _, _ = self._run(params, x, positions, collect_cache=False)
+        return self._unembed(params, x), jnp.zeros((), jnp.float32)
+
+    def loss(self, params, tokens, labels, mask=None):
+        logits, _ = self.forward(params, tokens)
+        return softmax_cross_entropy(logits, labels, mask)
+
+    def prefill(self, params, tokens, max_len=None):
+        B, S = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        x = self._embed(params, tokens)
+        x, unit_caches, tail_caches = self._run(params, x, positions,
+                                                collect_cache=True)
+        logits = self._unembed(params, x[:, -1:])
+        return logits, {"units": unit_caches, "tail": tail_caches}
+
+    def init_cache(self, batch: int, max_len: int):
+        cfg = self.cfg
+
+        def one(kind):
+            if kind == "attn":
+                return attn.init_kv_cache(
+                    cfg.replace(attention_window=cfg.local_window),
+                    batch, max_len)
+            return blocks.init_rglru_state(cfg, batch)
+
+        unit = {f"l{i}": one(kind) for i, kind in enumerate(self.pattern)}
+        units = jax.tree.map(lambda *xs: jnp.stack(xs),
+                             *([unit] * self.n_units))
+        return {"units": units,
+                "tail": [one("rec") for _ in range(self.n_tail)]}
+
+    def decode_step(self, params, token, cache, pos):
+        cfg = self.cfg
+        x = self._embed(params, token)
+
+        def body(h, inp):
+            up, uc = inp
+            ncs = {}
+            for i, kind in enumerate(self.pattern):
+                h, nc = self._layer_decode(up[f"l{i}"], kind, h,
+                                           uc[f"l{i}"], pos)
+                ncs[f"l{i}"] = nc
+            return h, ncs
+
+        x, new_units = scan_layers(body, x,
+                                   (params["units"], cache["units"]),
+                                   unroll=cfg.unroll_layers)
+        new_tail = []
+        for lp, c in zip(params["tail"], cache["tail"]):
+            x, nc = self._layer_decode(lp, "rec", x, c, pos)
+            new_tail.append(nc)
+        return self._unembed(params, x), {"units": new_units,
+                                          "tail": new_tail}

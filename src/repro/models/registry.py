@@ -1,0 +1,19 @@
+"""Model factory: ModelConfig -> model object with the uniform contract."""
+from __future__ import annotations
+
+from repro.models.common import ModelConfig
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.arch_type == "ssm":
+        from repro.models.ssm import MambaLM
+        return MambaLM(cfg)
+    if cfg.arch_type == "hybrid":
+        from repro.models.hybrid import HybridLM
+        return HybridLM(cfg)
+    if cfg.arch_type in ("encdec", "audio"):
+        from repro.models.encdec import EncDecLM
+        return EncDecLM(cfg)
+    # dense / moe / vlm all share the decoder-only assembly
+    from repro.models.transformer import DecoderOnlyLM
+    return DecoderOnlyLM(cfg)

@@ -1,0 +1,102 @@
+"""Mamba-2 (SSD) language model — attention-free, constant-size state.
+
+[arXiv:2405.21060] State-space duality: training/prefill uses the chunked
+block decomposition (quadratic intra-chunk, linear inter-chunk), decode uses
+the O(1)-per-token recurrent form. The state (B, H, P, N) replaces the KV
+cache, which is what makes the ``long_500k`` shape native for this family.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks
+from repro.models.common import (ModelConfig, dense_init, rms_norm,
+                                 scan_layers, softmax_cross_entropy,
+                                 split_keys)
+
+
+class MambaLM:
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.ssm_state > 0, "ssm arch requires ssm_state"
+        self.cfg = cfg
+
+    def init(self, key) -> Any:
+        cfg = self.cfg
+        ks = split_keys(key, 3)
+        layer_keys = jax.random.split(ks[2], cfg.num_layers)
+
+        def one(k):
+            kn, kb = jax.random.split(k)
+            return {"norm": jnp.ones((cfg.d_model,), cfg.weight_dtype),
+                    "mixer": blocks.init_ssd_block(kb, cfg)}
+
+        params = {
+            "embed": dense_init(ks[0], (cfg.vocab_size, cfg.d_model),
+                                cfg.weight_dtype, scale=0.02),
+            "final_norm": jnp.ones((cfg.d_model,), cfg.weight_dtype),
+            "layers": jax.vmap(one)(layer_keys),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = dense_init(
+                ks[1], (cfg.d_model, cfg.vocab_size), cfg.weight_dtype)
+        return params
+
+    def _embed(self, params, tokens):
+        return jnp.take(params["embed"], tokens, axis=0).astype(
+            self.cfg.activation_dtype)
+
+    def _unembed(self, params, x):
+        cfg = self.cfg
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps, cfg.use_pallas)
+        head = (params["embed"].T if cfg.tie_embeddings
+                else params["lm_head"])
+        return x @ head.astype(x.dtype)
+
+    def _run(self, params, x, *, collect_state: bool):
+        cfg = self.cfg
+
+        def body(h, lp):
+            r = rms_norm(h, lp["norm"], cfg.norm_eps, cfg.use_pallas)
+            y, state = blocks.ssd_block_forward(lp["mixer"], cfg, r)
+            return h + y, (state if collect_state else 0)
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        return scan_layers(body_fn, x, params["layers"],
+                           unroll=cfg.unroll_layers)
+
+    def forward(self, params, tokens, positions=None):
+        x = self._embed(params, tokens)
+        x, _ = self._run(params, x, collect_state=False)
+        return self._unembed(params, x), jnp.zeros((), jnp.float32)
+
+    def loss(self, params, tokens, labels, mask=None):
+        logits, _ = self.forward(params, tokens)
+        return softmax_cross_entropy(logits, labels, mask)
+
+    def prefill(self, params, tokens, max_len=None):
+        x = self._embed(params, tokens)
+        x, states = self._run(params, x, collect_state=True)
+        return self._unembed(params, x[:, -1:]), states
+
+    def init_cache(self, batch: int, max_len: int):
+        one = blocks.init_ssd_state(self.cfg, batch)
+        return jax.tree.map(lambda *xs: jnp.stack(xs),
+                            *([one] * self.cfg.num_layers))
+
+    def decode_step(self, params, token, cache, pos):
+        cfg = self.cfg
+        x = self._embed(params, token)
+
+        def body(h, inp):
+            lp, st = inp
+            r = rms_norm(h, lp["norm"], cfg.norm_eps, cfg.use_pallas)
+            y, new_st = blocks.ssd_block_forward(lp["mixer"], cfg, r,
+                                                 state=st)
+            return h + y, new_st
+
+        x, new_cache = scan_layers(body, x, (params["layers"], cache),
+                                   unroll=cfg.unroll_layers)
+        return self._unembed(params, x), new_cache

@@ -1,0 +1,10 @@
+from repro.serving.engine import (EngineConfig, InferenceEngine, JaxBackend,
+                                  SimBackend)
+from repro.serving.kv_cache import PagedKVCache
+from repro.serving.metrics import MetricsExporter
+from repro.serving.request import Request, RequestState
+from repro.serving.scheduler import BatchPlan, ContinuousBatchingScheduler
+
+__all__ = ["EngineConfig", "InferenceEngine", "JaxBackend", "SimBackend",
+           "PagedKVCache", "MetricsExporter", "Request", "RequestState",
+           "BatchPlan", "ContinuousBatchingScheduler"]

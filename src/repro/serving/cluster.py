@@ -1,0 +1,114 @@
+"""Fleet-level serving (beyond paper — its conclusion targets "LLM
+inference clusters"): N engine replicas, each with its OWN AGFT tuner
+(per-node closed loops, no cross-node coordination needed — the paper's
+privacy/minimal-intrusion story holds per node), plus a load-aware router.
+
+Because each node learns from its own fingerprint stream, heterogeneous
+traffic splits (e.g. a router that segregates long-context from chat
+traffic) let different nodes converge to DIFFERENT frequencies — fleet
+energy beyond what one global setting achieves.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional
+
+import numpy as np
+
+from repro.core import AGFTConfig, AGFTTuner
+from repro.energy import A6000, HardwareSpec
+from repro.models.common import ModelConfig
+from repro.serving.engine import EngineConfig, InferenceEngine
+from repro.serving.request import Request
+
+
+def route_least_loaded(engines: List[InferenceEngine],
+                       req: Request) -> int:
+    """Default router: fewest running+waiting requests."""
+    loads = [e.sched.num_running() + e.sched.num_waiting() + len(e.pending)
+             for e in engines]
+    return int(np.argmin(loads))
+
+
+def route_by_length(engines: List[InferenceEngine], req: Request) -> int:
+    """Segregating router: long-context traffic to the first half of the
+    fleet, short/chat traffic to the second half (workload-homogeneous
+    nodes converge faster and to better-fitting frequencies)."""
+    n = len(engines)
+    half = max(n // 2, 1)
+    if req.prompt_len >= 1024:
+        pool = range(0, half)
+    else:
+        pool = range(half, n) if n > 1 else range(0, 1)
+    loads = {i: engines[i].sched.num_running() + engines[i].sched.num_waiting()
+             for i in pool}
+    return min(loads, key=loads.get)
+
+
+@dataclasses.dataclass
+class ClusterSummary:
+    energy_j: float
+    finished: int
+    mean_ttft_s: float
+    mean_tpot_s: float
+    edp: float
+    node_frequencies: List[float]
+    node_energy_j: List[float]
+
+
+class ServingCluster:
+    def __init__(self, model_cfg: ModelConfig, n_nodes: int = 2, *,
+                 hardware: HardwareSpec = A6000,
+                 engine_cfg: Optional[EngineConfig] = None,
+                 tuner_cfg: Optional[AGFTConfig] = None,
+                 with_tuners: bool = True,
+                 router: Callable = route_least_loaded):
+        self.engines = [InferenceEngine(model_cfg,
+                                        engine_cfg or EngineConfig(),
+                                        hardware=hardware,
+                                        initial_frequency=hardware.f_max)
+                        for _ in range(n_nodes)]
+        self.tuners = [AGFTTuner(hardware, tuner_cfg or AGFTConfig())
+                       if with_tuners else None for _ in range(n_nodes)]
+        self.router = router
+
+    # ------------------------------------------------------------------
+    def submit(self, requests: List[Request]) -> None:
+        """Route each request at its arrival time (arrival order)."""
+        for req in sorted(requests, key=lambda r: r.arrival_time):
+            idx = self.router(self.engines, req)
+            self.engines[idx].submit([req])
+
+    @property
+    def has_work(self) -> bool:
+        return any(e.has_work for e in self.engines)
+
+    def drain(self, max_iters: int = 10_000_000) -> None:
+        """Advance all nodes in lock-step on the slowest clock (nodes are
+        independent; stepping the laggard preserves causality)."""
+        it = 0
+        while self.has_work and it < max_iters:
+            active = [e for e in self.engines if e.has_work]
+            eng = min(active, key=lambda e: e.clock)
+            eng.step()
+            tuner = self.tuners[self.engines.index(eng)]
+            if tuner is not None:
+                tuner.maybe_act(eng)
+            it += 1
+
+    # ------------------------------------------------------------------
+    def summary(self) -> ClusterSummary:
+        fin = [r for e in self.engines for r in e.finished]
+        tpots = [r.tpot for r in fin if r.tpot is not None]
+        energy = sum(e.metrics.c.energy_joules_total for e in self.engines)
+        tpot = float(np.mean(tpots)) if tpots else 0.0
+        return ClusterSummary(
+            energy_j=energy,
+            finished=len(fin),
+            mean_ttft_s=float(np.mean([r.ttft for r in fin])) if fin else 0,
+            mean_tpot_s=tpot,
+            edp=energy * tpot,
+            node_frequencies=[e.frequency for e in self.engines],
+            node_energy_j=[e.metrics.c.energy_joules_total
+                           for e in self.engines],
+        )

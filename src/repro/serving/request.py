@@ -1,0 +1,83 @@
+"""Request lifecycle for the continuous-batching engine.
+
+Privacy contract (paper §2.2/§3.2): the AGFT tuner must never read
+``prompt_len``/``output_len``/``template_id`` of an individual request —
+those fields exist only so the *simulation* can execute the request. The
+tuner consumes exclusively the aggregate metrics exported by
+``serving.metrics``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import itertools
+from typing import Optional
+
+_ids = itertools.count()
+
+
+class RequestState(enum.Enum):
+    WAITING = "waiting"
+    RUNNING = "running"       # prefilling or decoding
+    PREEMPTED = "preempted"
+    FINISHED = "finished"
+
+
+@dataclasses.dataclass
+class Request:
+    arrival_time: float
+    prompt_len: int                  # hidden from the tuner
+    output_len: int                  # hidden from the tuner
+    template_id: int = 0             # prefix-cache identity (hidden)
+    template_frac: float = 0.9       # fraction of prompt shared w/ template
+    request_id: int = dataclasses.field(default_factory=lambda: next(_ids))
+
+    # execution progress
+    state: RequestState = RequestState.WAITING
+    prefilled: int = 0               # prompt tokens processed (incl. cached)
+    generated: int = 0
+    cached_tokens: int = 0           # prompt tokens served from prefix cache
+
+    # timing
+    first_scheduled_time: Optional[float] = None
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+
+    # ------------------------------------------------------------------
+    @property
+    def prefill_remaining(self) -> int:
+        return self.prompt_len - self.prefilled
+
+    @property
+    def is_prefilling(self) -> bool:
+        return self.prefilled < self.prompt_len
+
+    @property
+    def done(self) -> bool:
+        return self.generated >= self.output_len
+
+    @property
+    def context_len(self) -> int:
+        return self.prefilled + self.generated
+
+    # latency metrics -----------------------------------------------------
+    @property
+    def ttft(self) -> Optional[float]:
+        if self.first_token_time is None:
+            return None
+        return self.first_token_time - self.arrival_time
+
+    @property
+    def tpot(self) -> Optional[float]:
+        if self.finish_time is None or self.first_token_time is None:
+            return None
+        if self.output_len <= 1:
+            return 0.0
+        return ((self.finish_time - self.first_token_time)
+                / (self.output_len - 1))
+
+    @property
+    def e2e(self) -> Optional[float]:
+        if self.finish_time is None:
+            return None
+        return self.finish_time - self.arrival_time

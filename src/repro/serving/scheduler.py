@@ -1,0 +1,147 @@
+"""Continuous-batching scheduler (vLLM-style, chunked prefill).
+
+Every engine iteration builds a mixed batch: each RUNNING decode sequence
+contributes one token; WAITING/prefilling sequences contribute prompt chunks
+up to the per-iteration token budget. Finished sequences release their
+blocks immediately to admit waiting work — the "come-and-go" behaviour
+(Orca/vLLM) whose interleaving is exactly what makes phase identification
+from raw power telemetry hard (paper Fig. 1) and motivates the fingerprint.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+from repro.serving.kv_cache import PagedKVCache
+from repro.serving.request import Request, RequestState
+
+
+@dataclasses.dataclass
+class BatchPlan:
+    """Work selected for one iteration."""
+    prefill: List[Tuple[Request, int]]      # (request, new prompt tokens)
+    decode: List[Request]                   # one token each
+
+    @property
+    def prefill_tokens(self) -> int:
+        return sum(n for _, n in self.prefill)
+
+    @property
+    def decode_seqs(self) -> int:
+        return len(self.decode)
+
+    @property
+    def total_tokens(self) -> int:
+        return self.prefill_tokens + self.decode_seqs
+
+    @property
+    def empty(self) -> bool:
+        return not self.prefill and not self.decode
+
+
+class ContinuousBatchingScheduler:
+    def __init__(self, kv: PagedKVCache, *,
+                 max_num_seqs: int = 64,
+                 max_batched_tokens: int = 2048,
+                 prefill_chunk: int = 512):
+        self.kv = kv
+        self.max_num_seqs = max_num_seqs
+        self.max_batched_tokens = max_batched_tokens
+        self.prefill_chunk = prefill_chunk
+        self.waiting: List[Request] = []
+        self.running: List[Request] = []
+
+    # ------------------------------------------------------------------
+    def add_request(self, req: Request) -> None:
+        req.state = RequestState.WAITING
+        self.waiting.append(req)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)
+
+    def num_waiting(self) -> int:
+        return len(self.waiting)
+
+    def num_running(self) -> int:
+        return len(self.running)
+
+    # ------------------------------------------------------------------
+    def _admit(self, now: float) -> None:
+        """FCFS admission while seq and KV budgets allow."""
+        still_waiting: List[Request] = []
+        for req in self.waiting:
+            if len(self.running) >= self.max_num_seqs:
+                still_waiting.append(req)
+                continue
+            total = req.prompt_len + req.output_len
+            if self.kv.try_allocate(req, total):
+                req.state = RequestState.RUNNING
+                if req.first_scheduled_time is None:
+                    req.first_scheduled_time = now
+                # prefix-cache hits skip that prefill work
+                req.prefilled = req.cached_tokens
+                self.running.append(req)
+            else:
+                still_waiting.append(req)
+        self.waiting = still_waiting
+
+    def _preempt_lowest_priority(self) -> bool:
+        """Free blocks by kicking the most recent running request back to
+        the queue (vLLM recompute-style preemption)."""
+        for req in reversed(self.running):
+            if req.is_prefilling:
+                continue
+            self.running.remove(req)
+            self.kv.free(req, preempted=True)
+            req.state = RequestState.WAITING
+            req.prefilled = 0
+            req.generated = 0
+            req.cached_tokens = 0
+            self.waiting.insert(0, req)
+            return True
+        return False
+
+    # ------------------------------------------------------------------
+    def schedule(self, now: float) -> BatchPlan:
+        self._admit(now)
+        budget = self.max_batched_tokens
+        decode: List[Request] = []
+        prefill: List[Tuple[Request, int]] = []
+        # decodes first (latency-critical, one token each)
+        for req in self.running:
+            if not req.is_prefilling and budget > 0:
+                decode.append(req)
+                budget -= 1
+        # then chunked prefill
+        for req in self.running:
+            if req.is_prefilling and budget > 0:
+                chunk = min(req.prefill_remaining, self.prefill_chunk, budget)
+                if chunk > 0:
+                    prefill.append((req, chunk))
+                    budget -= chunk
+        return BatchPlan(prefill=prefill, decode=decode)
+
+    # ------------------------------------------------------------------
+    def complete_iteration(self, plan: BatchPlan, now: float
+                           ) -> List[Request]:
+        """Apply the iteration's effects; returns newly finished requests."""
+        finished: List[Request] = []
+        for req, chunk in plan.prefill:
+            req.prefilled += chunk
+            if not req.is_prefilling:
+                # prompt done -> first output token is produced this iter
+                req.generated += 1
+                if req.first_token_time is None:
+                    req.first_token_time = now
+                self.kv.register_prefix(req)
+        for req in plan.decode:
+            req.generated += 1
+        for req in list(self.running):
+            if req.done:
+                req.state = RequestState.FINISHED
+                req.finish_time = now
+                self.running.remove(req)
+                self.kv.free(req)
+                finished.append(req)
+        return finished

@@ -1,0 +1,44 @@
+"""Minimal msgpack-free checkpointing: params/opt-state pytrees to .npz."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save_checkpoint(path: str, params: Any, extra: Any = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    leaves, treedef = jax.tree.flatten(params)
+    arrays = {f"p{i}": np.asarray(x) for i, x in enumerate(leaves)}
+    meta = {"treedef": str(treedef), "n": len(leaves)}
+    if extra is not None:
+        e_leaves, e_def = jax.tree.flatten(extra)
+        for i, x in enumerate(e_leaves):
+            arrays[f"e{i}"] = np.asarray(x)
+        meta["extra_treedef"] = str(e_def)
+        meta["extra_n"] = len(e_leaves)
+    np.savez(path, __meta__=json.dumps(meta), **arrays)
+
+
+def load_checkpoint(path: str, params_template: Any,
+                    extra_template: Any = None) -> Tuple[Any, Any]:
+    data = np.load(path if path.endswith(".npz") else path + ".npz",
+                   allow_pickle=False)
+    meta = json.loads(str(data["__meta__"]))
+    _, treedef = jax.tree.flatten(params_template)
+    leaves = [data[f"p{i}"] for i in range(meta["n"])]
+    params = jax.tree.unflatten(treedef, leaves)
+    extra = None
+    if extra_template is not None and "extra_n" in meta:
+        _, e_def = jax.tree.flatten(extra_template)
+        extra = jax.tree.unflatten(
+            e_def, [data[f"e{i}"] for i in range(meta["extra_n"])])
+    return params, extra

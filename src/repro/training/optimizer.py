@@ -1,0 +1,81 @@
+"""AdamW on parameter pytrees — pure JAX, no optax dependency.
+
+State is a pytree matching params (m, v moments) plus a scalar step, so the
+distributed layer can shard optimizer state with the same PartitionSpecs as
+the parameters (ZeRO-0 tensor-parallel layout)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    # moments in fp32 even when params are bf16
+    moment_dtype: str = "float32"
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+def init_adamw(params: Any, cfg: AdamWConfig = AdamWConfig()) -> AdamWState:
+    dt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)        # noqa: E731
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      m=jax.tree.map(zeros, params),
+                      v=jax.tree.map(zeros, params))
+
+
+def _schedule(cfg: AdamWConfig, step):
+    warm = jnp.minimum(step.astype(jnp.float32) / max(cfg.warmup_steps, 1),
+                       1.0)
+    return cfg.lr * warm
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def adamw_update(cfg: AdamWConfig, params: Any, grads: Any,
+                 state: AdamWState) -> Tuple[Any, AdamWState, jnp.ndarray]:
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    lr = _schedule(cfg, step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m2 = cfg.b1 * m + (1 - cfg.b1) * g
+        v2 = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh = m2 / b1c
+        vh = v2 / b2c
+        delta = lr * (mh / (jnp.sqrt(vh) + cfg.eps)
+                      + cfg.weight_decay * p.astype(jnp.float32))
+        return (p.astype(jnp.float32) - delta).astype(p.dtype), m2, v2
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_p, AdamWState(step=step, m=new_m, v=new_v), gnorm

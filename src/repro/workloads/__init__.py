@@ -1,0 +1,6 @@
+from repro.workloads.azure_trace import generate_azure_trace
+from repro.workloads.prototypes import (PROTOTYPES, WorkloadSpec,
+                                        generate_requests)
+
+__all__ = ["PROTOTYPES", "WorkloadSpec", "generate_requests",
+           "generate_azure_trace"]

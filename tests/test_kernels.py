@@ -1,0 +1,196 @@
+"""Per-kernel validation: shape/dtype sweeps asserting allclose against the
+pure-jnp oracles in repro.kernels.ref (Pallas interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
+       jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,H,Hkv,D", [
+    (1, 128, 4, 4, 64),     # MHA
+    (2, 256, 8, 2, 64),     # GQA group=4
+    (1, 256, 4, 1, 128),    # MQA, wide head
+    (2, 384, 6, 2, 64),     # non-pow2 heads (starcoder-like ratios)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, S, H, Hkv, D, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = rand(ks[0], (B, S, H, D), dtype)
+    k = rand(ks[1], (B, S, Hkv, D), dtype)
+    v = rand(ks[2], (B, S, Hkv, D), dtype)
+    got = ops.flash_attention(q, k, v, causal=True)
+    want = ref.flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+def test_flash_attention_noncausal():
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = rand(ks[0], (2, 128, 4, 64), jnp.float32)
+    k = rand(ks[1], (2, 128, 2, 64), jnp.float32)
+    v = rand(ks[2], (2, 128, 2, 64), jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=False)
+    want = ref.flash_attention(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("block_q,block_k", [(64, 64), (128, 64), (64, 128)])
+def test_flash_attention_block_shapes(block_q, block_k):
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = rand(ks[0], (1, 256, 2, 64), jnp.float32)
+    k = rand(ks[1], (1, 256, 2, 64), jnp.float32)
+    v = rand(ks[2], (1, 256, 2, 64), jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=True,
+                              block_q=block_q, block_k=block_k)
+    want = ref.flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,T,H,Hkv,D", [
+    (1, 512, 4, 4, 64),
+    (2, 1024, 8, 2, 64),
+    (4, 512, 4, 1, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_sweep(B, T, H, Hkv, D, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(3), 4)
+    q = rand(ks[0], (B, 1, H, D), dtype)
+    kc = rand(ks[1], (B, T, Hkv, D), dtype)
+    vc = rand(ks[2], (B, T, Hkv, D), dtype)
+    lengths = jax.random.randint(ks[3], (B,), 1, T + 1)
+    valid = jnp.arange(T)[None] < lengths[:, None]
+    got = ops.decode_attention(q, kc, vc, valid)
+    want = ref.decode_attention(q, kc, vc, valid)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+def test_decode_attention_ring_buffer_validity():
+    """Scattered validity (ring-buffer decode) — not just a prefix mask."""
+    ks = jax.random.split(jax.random.PRNGKey(4), 4)
+    B, T, H, Hkv, D = 2, 512, 4, 2, 64
+    q = rand(ks[0], (B, 1, H, D), jnp.float32)
+    kc = rand(ks[1], (B, T, Hkv, D), jnp.float32)
+    vc = rand(ks[2], (B, T, Hkv, D), jnp.float32)
+    valid = jax.random.bernoulli(ks[3], 0.7, (B, T))
+    got = ops.decode_attention(q, kc, vc, valid)
+    want = ref.decode_attention(q, kc, vc, valid)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,W", [(1, 64, 128), (2, 256, 256),
+                                   (3, 128, 384)])
+def test_rglru_sweep(B, S, W):
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    x = jax.random.normal(ks[0], (B, S, W))
+    log_a = -jax.nn.softplus(jax.random.normal(ks[1], (B, S, W)))
+    h0 = jax.random.normal(ks[2], (B, W))
+    ys, hl = ops.rglru_scan(x, log_a, h0)
+    ys_r, hl_r = ref.rglru_scan(x, log_a, h0)
+    np.testing.assert_allclose(np.asarray(ys), np.asarray(ys_r),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(hl), np.asarray(hl_r),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# SSD chunked scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,h,p,g,n,chunk", [
+    (1, 128, 4, 64, 1, 64, 32),
+    (2, 256, 8, 32, 2, 32, 64),
+    (1, 64, 2, 64, 1, 128, 16),
+])
+def test_ssd_sweep(b, s, h, p, g, n, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(6), 5)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = jax.random.normal(ks[3], (b, s, g, n)) * 0.5
+    C = jax.random.normal(ks[4], (b, s, g, n)) * 0.5
+    y, st = ops.ssd_scan(x, dt, A, B, C, chunk=chunk)
+    y_r, st_r = ref.ssd_scan(x, dt, A, B, C, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_r),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(st_r),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_kernel_matches_model_chunked_path():
+    """The model's jnp chunked implementation and the kernel agree."""
+    from repro.models.blocks import ssd_chunked
+    ks = jax.random.split(jax.random.PRNGKey(7), 5)
+    b, s, h, p, g, n = 1, 128, 4, 32, 1, 64
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = jax.random.normal(ks[3], (b, s, g, n)) * 0.5
+    C = jax.random.normal(ks[4], (b, s, g, n)) * 0.5
+    y1, st1 = ssd_chunked(x, dt, A, B, C, chunk=32)
+    y2, st2 = ops.ssd_scan(x, dt, A, B, C, chunk=32)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st1), np.asarray(st2),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(4, 128), (2, 17, 256), (3, 5, 7, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_sweep(shape, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(8), 2)
+    x = rand(ks[0], shape, dtype)
+    w = 1.0 + 0.1 * jax.random.normal(ks[1], (shape[-1],))
+    got = ops.rmsnorm(x, w.astype(dtype))
+    want = ref.rmsnorm(x, w.astype(dtype))
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+# ---------------------------------------------------------------------------
+# Kernel-path model equivalence (use_pallas=True == reference model)
+# ---------------------------------------------------------------------------
+
+def test_model_with_pallas_kernels_matches_reference():
+    from repro.configs import get_config
+    from repro.models import build_model
+    key = jax.random.PRNGKey(9)
+    for arch in ["tinyllama-1.1b", "recurrentgemma-9b", "mamba2-1.3b"]:
+        cfg = get_config(arch).reduced()
+        m_ref = build_model(cfg)
+        m_ker = build_model(cfg.replace(use_pallas=True))
+        params = m_ref.init(key)
+        tokens = jax.random.randint(key, (2, 64), 0, cfg.vocab_size)
+        l_ref, _ = m_ref.forward(params, tokens)
+        l_ker, _ = m_ker.forward(params, tokens)
+        np.testing.assert_allclose(np.asarray(l_ker), np.asarray(l_ref),
+                                   rtol=5e-4, atol=5e-4)

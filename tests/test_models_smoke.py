@@ -1,0 +1,136 @@
+"""Per-architecture smoke tests (assignment requirement): a REDUCED variant
+of every assigned family (<=2-3 layers, d_model<=512, <=4 experts) runs one
+forward/train step and one prefill+decode step on CPU; output shapes and
+NaN-freeness are asserted. Decode from the prefill cache must match the full
+teacher-forced forward — this exercises the KV/MLA/SSD/LRU cache contracts.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.models import build_model
+
+ALL_ARCHS = ASSIGNED_ARCHS + ["llama3-3b"]
+
+
+def _inputs(cfg, key, B, S):
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    if cfg.is_encoder_decoder:
+        frames = jax.random.normal(
+            key, (B, cfg.encoder_seq, cfg.d_model), cfg.activation_dtype)
+        return (tokens, frames)
+    return (tokens,)
+
+
+@pytest.fixture(scope="module")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_forward_shapes_no_nan(arch, key):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(key)
+    B, S = 2, 16
+    args = _inputs(cfg, key, B, S)
+    logits, aux = model.forward(params, *args)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+    assert not bool(jnp.any(jnp.isinf(logits)))
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_train_step(arch, key):
+    """One gradient step on the reduced config: loss finite, grads finite,
+    params actually move."""
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(key)
+    B, S = 2, 16
+    args = _inputs(cfg, key, B, S + 1)
+    tokens = args[0]
+    inp, labels = tokens[:, :-1], tokens[:, 1:]
+    extra = args[1:]
+
+    def loss_fn(p):
+        if extra:
+            return model.loss(p, inp, labels, extra[0][:, : cfg.encoder_seq])
+        return model.loss(p, inp, labels)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert jnp.isfinite(loss)
+    leaves = jax.tree.leaves(grads)
+    assert all(bool(jnp.all(jnp.isfinite(g))) for g in leaves)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in leaves))
+    assert float(gnorm) > 0.0
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_prefill_decode_matches_forward(arch, key):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(key)
+    B, S, CAP = 2, 12, 32
+    args = _inputs(cfg, key, B, S + 1)
+    tokens = args[0]
+    extra = args[1:]
+    full, _ = model.forward(params, tokens, *extra)
+    pl, cache = model.prefill(params, tokens[:, :S], *extra, max_len=CAP)
+    np.testing.assert_allclose(np.asarray(pl[:, 0]), np.asarray(full[:, S - 1]),
+                               rtol=2e-4, atol=2e-4)
+    pos = jnp.full((B,), S, jnp.int32)
+    dl, new_cache = model.decode_step(params, tokens[:, S:S + 1], cache, pos)
+    np.testing.assert_allclose(np.asarray(dl[:, 0]), np.asarray(full[:, S]),
+                               rtol=1e-3, atol=1e-3)
+    # cache pytree structure must be stable across steps (scan/jit contract)
+    assert (jax.tree.structure(new_cache) == jax.tree.structure(cache))
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_decode_from_zero_cache(arch, key):
+    """Greedy decode 4 tokens from an empty cache — shapes stable, no NaN."""
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(key)
+    B, CAP = 2, 16
+    cache = model.init_cache(B, CAP)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    pos = jnp.zeros((B,), jnp.int32)
+    if cfg.is_encoder_decoder:
+        # populate cross caches via prefill of a single BOS token
+        frames = jax.random.normal(
+            key, (B, cfg.encoder_seq, cfg.d_model), cfg.activation_dtype)
+        _, cache = model.prefill(params, tok, frames, max_len=CAP)
+        pos = jnp.ones((B,), jnp.int32)
+    step = jax.jit(model.decode_step)
+    for _ in range(4):
+        logits, cache = step(params, tok, cache, pos)
+        assert logits.shape == (B, 1, cfg.vocab_size)
+        assert not bool(jnp.any(jnp.isnan(logits)))
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        pos = pos + 1
+
+
+def test_sliding_window_variant_matches_full_within_window(key):
+    """With S <= window the sliding-window variant must equal full attention."""
+    cfg = get_config("tinyllama-1.1b").reduced()
+    cfgw = cfg.replace(attention_window=64)
+    m_full, m_win = build_model(cfg), build_model(cfgw)
+    params = m_full.init(key)
+    tokens = jax.random.randint(key, (2, 16), 0, cfg.vocab_size)
+    lf, _ = m_full.forward(params, tokens)
+    lw, _ = m_win.forward(params, tokens)
+    np.testing.assert_allclose(np.asarray(lf), np.asarray(lw),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_long_context_configs_are_subquadratic():
+    from repro.configs import config_for_shape
+    for arch in ASSIGNED_ARCHS:
+        cfg = config_for_shape(arch, "long_500k")
+        ok = (cfg.arch_type in ("ssm", "hybrid")) or cfg.attention_window > 0
+        assert ok, f"{arch} long_500k config is not sub-quadratic"

@@ -1,0 +1,128 @@
+"""Hypothesis property tests on system invariants."""
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.linucb import LinUCBArm, LinUCBBank
+from repro.core.page_hinkley import PageHinkley
+from repro.energy import A6000, DVFSModel
+from repro.energy.edp import WindowStats
+from repro.core.features import FeatureExtractor
+from repro.serving.request import Request
+from repro.workloads import PROTOTYPES, generate_requests
+from repro.workloads.azure_trace import generate_azure_trace
+
+floats01 = st.floats(0.0, 1.0, allow_nan=False)
+
+
+class TestLinUCBProperties:
+    @given(st.lists(st.tuples(
+        st.lists(st.floats(-1, 1, allow_nan=False, allow_infinity=False),
+                 min_size=3, max_size=3),
+        st.floats(-5, 5, allow_nan=False)), min_size=1, max_size=60))
+    @settings(max_examples=40, deadline=None)
+    def test_a_inv_stays_inverse_and_spd(self, updates):
+        arm = LinUCBArm(dim=3)
+        for x, r in updates:
+            arm.update(np.array(x), r)
+        np.testing.assert_allclose(arm.A @ arm.A_inv, np.eye(3), atol=1e-6)
+        eig = np.linalg.eigvalsh(arm.A)
+        assert np.all(eig >= 1.0 - 1e-9)           # ridge floor preserved
+
+    @given(st.lists(st.floats(-3, 0, allow_nan=False), min_size=2,
+                    max_size=50))
+    @settings(max_examples=40, deadline=None)
+    def test_mean_reward_matches_numpy(self, rewards):
+        arm = LinUCBArm(dim=2)
+        x = np.array([1.0, 0.5])
+        for r in rewards:
+            arm.update(x, r)
+        np.testing.assert_allclose(arm.mean_reward, np.mean(rewards),
+                                   rtol=1e-9)
+
+    @given(st.integers(2, 8), st.integers(0, 200))
+    @settings(max_examples=20, deadline=None)
+    def test_selection_always_within_action_space(self, n_arms, n_updates):
+        rng = np.random.default_rng(0)
+        freqs = [300.0 * (i + 1) for i in range(n_arms)]
+        bank = LinUCBBank(freqs, dim=3)
+        for _ in range(n_updates):
+            x = rng.uniform(0, 1, 3)
+            f = bank.select_ucb(x, 0.5)
+            assert f in bank.arms
+            bank.arms[f].update(x, -1.0 + 0.1 * rng.normal())
+        assert bank.select_greedy(rng.uniform(0, 1, 3)) in bank.arms
+
+
+class TestDetectorProperties:
+    @given(st.floats(0.01, 0.2), st.floats(0.5, 5.0))
+    @settings(max_examples=20, deadline=None)
+    def test_ph_never_alarms_on_constant(self, delta, threshold):
+        ph = PageHinkley(delta=delta, threshold=threshold)
+        assert not any(ph.update(-1.0) for _ in range(300))
+
+
+class TestPowerModelProperties:
+    @given(st.floats(1e9, 1e15), st.floats(1e6, 1e12),
+           st.floats(210.0, 1800.0))
+    @settings(max_examples=60, deadline=None)
+    def test_time_positive_power_within_envelope(self, flops, mem, f):
+        m = DVFSModel(A6000)
+        t, p = m.iteration_time_power(flops, mem, f)
+        assert t > 0
+        assert A6000.p_idle <= p <= (A6000.p_idle + A6000.p_static_active
+                                     + A6000.p_dyn_compute
+                                     + A6000.p_dyn_memory + 1e-9)
+
+    @given(st.floats(1e9, 1e14), st.floats(1e6, 1e11))
+    @settings(max_examples=30, deadline=None)
+    def test_latency_monotone_nonincreasing_in_frequency(self, flops, mem):
+        m = DVFSModel(A6000)
+        ts = [m.iteration_time_power(flops, mem, f)[0]
+              for f in (300.0, 900.0, 1500.0, 1800.0)]
+        assert all(a >= b - 1e-12 for a, b in zip(ts, ts[1:]))
+
+
+class TestWorkloadProperties:
+    @given(st.sampled_from(sorted(PROTOTYPES)), st.integers(1, 200),
+           st.integers(0, 10))
+    @settings(max_examples=20, deadline=None)
+    def test_generated_requests_within_spec(self, name, n, seed):
+        spec = PROTOTYPES[name]
+        reqs = generate_requests(spec, n, seed=seed)
+        assert len(reqs) == n
+        last = 0.0
+        for r in reqs:
+            assert spec.context_range[0] <= r.prompt_len \
+                <= spec.context_range[1]
+            assert spec.generation_range[0] <= r.output_len \
+                <= spec.generation_range[1]
+            assert 0 <= r.template_id < spec.template_pool
+            assert r.arrival_time >= last
+            last = r.arrival_time
+
+    @given(st.integers(0, 5))
+    @settings(max_examples=5, deadline=None)
+    def test_azure_trace_context_heavy_dominates(self, seed):
+        reqs = generate_azure_trace(1200.0, base_rate=2.0, seed=seed)
+        assert len(reqs) > 100
+        ctx_heavy = sum(1 for r in reqs if r.prompt_len > 2 * r.output_len)
+        assert ctx_heavy / len(reqs) > 0.6       # 2024 mix: context-heavy
+
+
+class TestFeatureProperties:
+    @given(st.floats(0.1, 10), st.floats(0, 1e5), st.floats(0, 1e5),
+           st.integers(0, 1000), st.integers(0, 64), st.integers(0, 64),
+           floats01, floats01)
+    @settings(max_examples=60, deadline=None)
+    def test_features_bounded_and_finite(self, dur, e, busy, toks, run,
+                                         wait, usage, hit):
+        w = WindowStats(duration_s=dur, energy_j=e, busy_s=busy,
+                        prefill_tokens=toks, cached_prompt_tokens=0,
+                        generation_tokens=toks, iterations=max(toks, 1),
+                        requests_running=run, requests_waiting=wait,
+                        gpu_cache_usage=usage, cache_hit_rate=hit)
+        x = FeatureExtractor()(w)
+        assert x.shape == (7,)
+        assert np.all(np.isfinite(x))
+        assert np.all(x >= 0) and np.all(x <= 1.5)

@@ -1,0 +1,102 @@
+"""Sharding-rule unit tests (no multi-device runtime needed: specs are pure
+metadata; the compile-level proof lives in test_dryrun.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.distributed.sharding import (batch_pspec, cache_pspecs,
+                                        logits_pspec, param_pspecs,
+                                        sanitize_spec)
+
+
+def fake_mesh(shape=(2, 4), names=("data", "model")):
+    devs = np.array(jax.devices() * int(np.prod(shape)))[:int(np.prod(shape))]
+    return Mesh(devs.reshape(shape), names)
+
+
+MESH = fake_mesh()
+
+
+class TestSanitize:
+    def test_drops_nondivisible(self):
+        spec = sanitize_spec(P(None, "model"), (10, 51865), MESH)
+        assert spec == P(None, None)
+
+    def test_keeps_divisible(self):
+        spec = sanitize_spec(P(None, "model"), (10, 512), MESH)
+        assert spec == P(None, "model")
+
+    def test_tuple_axes(self):
+        spec = sanitize_spec(P(("data", "model"), None), (8, 3), MESH)
+        assert spec == P(("data", "model"), None)
+        spec = sanitize_spec(P(("data", "model"), None), (6, 3), MESH)
+        assert spec == P(None, None)
+
+
+class TestParamSpecs:
+    def test_dense_rules(self):
+        params = {
+            "embed": jax.ShapeDtypeStruct((32000, 2048), jnp.bfloat16),
+            "lm_head": jax.ShapeDtypeStruct((2048, 32000), jnp.bfloat16),
+            "layers": {"attn": {
+                "wq": jax.ShapeDtypeStruct((22, 2048, 2048), jnp.bfloat16),
+                "wo": jax.ShapeDtypeStruct((22, 2048, 2048), jnp.bfloat16),
+            }},
+        }
+        specs = param_pspecs(params, MESH)
+        assert specs["embed"] == P("model", None)
+        assert specs["lm_head"] == P(None, "model")
+        # stacked params get a leading unsharded layer axis
+        assert specs["layers"]["attn"]["wq"] == P(None, None, "model")
+        assert specs["layers"]["attn"]["wo"] == P(None, "model", None)
+
+    def test_moe_expert_parallel(self):
+        params = {"layers": {"moe": {
+            "w_in": jax.ShapeDtypeStruct((26, 64, 2048, 1408), jnp.bfloat16),
+            "w_out": jax.ShapeDtypeStruct((26, 64, 1408, 2048), jnp.bfloat16),
+            "router": jax.ShapeDtypeStruct((26, 2048, 64), jnp.bfloat16),
+        }}}
+        specs = param_pspecs(params, MESH)
+        assert specs["layers"]["moe"]["w_in"] == P(None, "model", None, None)
+        assert specs["layers"]["moe"]["w_out"] == P(None, "model", None, None)
+        assert specs["layers"]["moe"]["router"] == P(None, None, None)
+
+    def test_nondivisible_vocab_replicates(self):
+        params = {"embed": jax.ShapeDtypeStruct((51865, 1024), jnp.float32)}
+        specs = param_pspecs(params, MESH)
+        assert specs["embed"] == P(None, None)
+
+
+class TestCacheSpecs:
+    def test_kv_head_parallel_when_divisible(self):
+        cache = {"scanned": {
+            "k": jax.ShapeDtypeStruct((22, 8, 128, 4, 64), jnp.bfloat16)}}
+        specs = cache_pspecs(cache, MESH, global_batch=8)
+        assert specs["scanned"]["k"] == P(None, ("data",), None, "model",
+                                          None)
+
+    def test_context_parallel_fallback(self):
+        # Hkv=1 cannot shard over model=4 -> shard cache length instead
+        cache = {"scanned": {
+            "k": jax.ShapeDtypeStruct((22, 8, 128, 1, 64), jnp.bfloat16)}}
+        specs = cache_pspecs(cache, MESH, global_batch=8)
+        assert specs["scanned"]["k"] == P(None, ("data",), "model", None,
+                                          None)
+
+    def test_batch_one_replicates_batch_axis(self):
+        cache = {"scanned": {
+            "k": jax.ShapeDtypeStruct((22, 1, 128, 4, 64), jnp.bfloat16)}}
+        specs = cache_pspecs(cache, MESH, global_batch=1)
+        assert specs["scanned"]["k"][1] is None
+
+
+class TestBatchAndLogits:
+    def test_batch_sharded_when_divisible(self):
+        assert batch_pspec(MESH, 8)[0] in ("data", ("data",))
+        assert batch_pspec(MESH, 3)[0] is None
+
+    def test_logits_vocab_guard(self):
+        assert logits_pspec(MESH, 8, 32000)[-1] == "model"
+        assert logits_pspec(MESH, 8, 51865)[-1] is None

@@ -1,0 +1,85 @@
+"""Training substrate tests: AdamW math, loss decrease, checkpoint
+round-trip, data pipeline determinism."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data import synthetic_token_batches
+from repro.models import build_model
+from repro.training import (AdamWConfig, adamw_update, init_adamw,
+                            load_checkpoint, make_train_step,
+                            save_checkpoint, train)
+
+
+def test_adamw_matches_reference_on_quadratic():
+    """AdamW must descend f(w) = ||w||^2 quickly."""
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=1,
+                      grad_clip=1e9)
+    params = {"w": jnp.array([3.0, -2.0, 1.0])}
+    state = init_adamw(params, cfg)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = adamw_update(cfg, params, grads, state)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 1e-2
+
+
+def test_grad_clip_bounds_update():
+    cfg = AdamWConfig(lr=1.0, grad_clip=1.0, weight_decay=0.0,
+                      warmup_steps=1)
+    params = {"w": jnp.zeros(4)}
+    state = init_adamw(params, cfg)
+    _, _, gnorm = adamw_update(cfg, params, {"w": jnp.full(4, 100.0)},
+                               state)
+    np.testing.assert_allclose(float(gnorm), 200.0, rtol=1e-5)
+
+
+def test_train_loss_decreases_tiny_model():
+    cfg = get_config("tinyllama-1.1b").reduced().replace(num_layers=2)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    data = synthetic_token_batches(cfg.vocab_size, 4, 32, seed=0)
+    _, _, hist = train(model, params, data, steps=30,
+                       opt_cfg=AdamWConfig(lr=1e-3, warmup_steps=5),
+                       log_every=29)
+    assert hist[-1]["loss"] < hist[0]["loss"]
+
+
+def test_checkpoint_roundtrip():
+    cfg = get_config("tinyllama-1.1b").reduced().replace(num_layers=2)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    with tempfile.TemporaryDirectory() as d:
+        p = os.path.join(d, "ckpt.npz")
+        save_checkpoint(p, params)
+        loaded, _ = load_checkpoint(p, params)
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(loaded)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_data_pipeline_deterministic_and_learnable():
+    it1 = synthetic_token_batches(100, 2, 16, seed=3)
+    it2 = synthetic_token_batches(100, 2, 16, seed=3)
+    b1, b2 = next(it1), next(it2)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    # labels are next-token-shifted views of the same stream
+    assert b1["tokens"].shape == b1["labels"].shape == (2, 16)
+    assert b1["tokens"].max() < 100
+
+
+def test_train_step_jits_once():
+    cfg = get_config("tinyllama-1.1b").reduced().replace(num_layers=2)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = init_adamw(params)
+    step = jax.jit(make_train_step(model))
+    data = synthetic_token_batches(cfg.vocab_size, 2, 16, seed=1)
+    b = next(data)
+    batch = {k: jnp.asarray(v) for k, v in b.items()}
+    p1, o1, m1 = step(params, opt, batch)
+    p2, o2, m2 = step(p1, o1, batch)
+    assert int(m2["step"]) == 2
+    assert jnp.isfinite(m2["loss"])
