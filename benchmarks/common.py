@@ -4,13 +4,13 @@ from __future__ import annotations
 import json
 import os
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Union
 
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import AGFTConfig, AGFTTuner
 from repro.energy import A6000
+from repro.policies import PowerPolicy, get_policy
 from repro.serving import EngineConfig, InferenceEngine
 from repro.workloads import (PROTOTYPES, generate_azure_trace,
                              generate_requests)
@@ -45,10 +45,26 @@ def make_engine(frequency: Optional[float] = None,
     return eng
 
 
+def resolve_policy(policy, policy_kwargs: Optional[Dict] = None):
+    """Registry name -> constructed policy; instances/None pass through."""
+    if isinstance(policy, str):
+        return get_policy(policy, hardware=A6000, **(policy_kwargs or {}))
+    return policy
+
+
 def run_workload(workload: str, *, n_requests: int = 400,
                  rate: float = BASE_RATE, frequency: Optional[float] = None,
-                 tuner: Optional[AGFTTuner] = None, seed: int = 1,
+                 policy: Union[str, PowerPolicy, None] = None,
+                 policy_kwargs: Optional[Dict] = None,
+                 tuner=None, seed: int = 1,
                  azure_duration: float = 0.0) -> Dict:
+    """Run one workload trace; ``policy`` is a registry name (e.g.
+    "agft"/"static"/"ondemand"), a PowerPolicy instance, or None for fixed
+    clocks at ``frequency`` (default f_max). ``tuner=`` is the legacy
+    alias for a ready instance."""
+    if policy is None:
+        policy = tuner
+    policy = resolve_policy(policy, policy_kwargs)
     eng = make_engine(frequency)
     if workload == "azure":
         eng.submit(generate_azure_trace(azure_duration or 1200.0,
@@ -57,7 +73,7 @@ def run_workload(workload: str, *, n_requests: int = 400,
         eng.submit(generate_requests(PROTOTYPES[workload], n_requests,
                                      base_rate=rate, seed=seed))
     t0 = time.perf_counter()
-    eng.drain(tuner=tuner)
+    eng.drain(policy=policy)
     wall = time.perf_counter() - t0
     fin = eng.finished
     c = eng.metrics.c
@@ -65,6 +81,7 @@ def run_workload(workload: str, *, n_requests: int = 400,
     return {
         "workload": workload,
         "frequency": frequency,
+        "policy": type(policy).__name__ if policy is not None else None,
         "finished": len(fin),
         "energy_j": c.energy_joules_total,
         "sim_s": eng.clock,
@@ -79,11 +96,13 @@ def run_workload(workload: str, *, n_requests: int = 400,
         "host_wall_s": wall,
         "host_us_per_iteration": 1e6 * wall / max(c.iterations_total, 1),
         "engine": eng,
+        "policy_obj": policy,
     }
 
 
 def strip_engine(row: Dict) -> Dict:
-    return {k: v for k, v in row.items() if k != "engine"}
+    return {k: v for k, v in row.items()
+            if k not in ("engine", "policy_obj")}
 
 
 def sweep_frequencies(workload: str, freqs: List[float], *,

@@ -5,8 +5,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import make_engine, save_json
-from repro.core import AGFTConfig, AGFTTuner
-from repro.energy import A6000
+from repro.policies import get_policy
 from repro.workloads import PROTOTYPES, generate_azure_trace, \
     generate_requests
 
@@ -20,8 +19,8 @@ def _run(strategy: str, workload: str, n=1200, rate=3.0, seed=6,
     else:
         eng.submit(generate_requests(PROTOTYPES[workload], n,
                                      base_rate=rate, seed=seed))
-    tuner = AGFTTuner(A6000, AGFTConfig(strategy=strategy))
-    eng.drain(tuner=tuner)
+    tuner = get_policy("agft", strategy=strategy)
+    eng.drain(policy=tuner)
     fin = eng.finished
     tpot = float(np.mean([r.tpot for r in fin if r.tpot is not None]))
     rewards = [h["reward"] for h in tuner.history if h["reward"] is not None]

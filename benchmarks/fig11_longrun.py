@@ -7,33 +7,29 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import make_engine, save_json
-from repro.core import AGFTTuner
-from repro.energy import A6000
+from repro.policies import get_policy
 from repro.workloads import generate_azure_trace
 
 
 def _run(duration: float, rate: float, seed: int, with_tuner: bool):
     eng = make_engine()
     eng.submit(generate_azure_trace(duration, base_rate=rate, seed=seed))
-    tuner = AGFTTuner(A6000) if with_tuner else None
+    tuner = get_policy("agft") if with_tuner else None
     # sample cumulative series every 30 sim-seconds
     series = []
     next_t = 30.0
     while eng.has_work:
-        eng.step()
-        if tuner:
-            tuner.maybe_act(eng)
-        if eng.clock >= next_t:
-            c = eng.metrics.c
-            gen = max(c.generation_tokens_total, 1)
-            series.append({
-                "t": eng.clock,
-                "energy_j": c.energy_joules_total,
-                "cum_tpot": c.busy_seconds_total / gen,
-                "freq": eng.frequency,
-                "power_w": c.current_power_watts,
-            })
-            next_t = eng.clock + 30.0
+        eng.run_until(next_t, policy=tuner)
+        c = eng.metrics.c
+        gen = max(c.generation_tokens_total, 1)
+        series.append({
+            "t": eng.clock,
+            "energy_j": c.energy_joules_total,
+            "cum_tpot": c.busy_seconds_total / gen,
+            "freq": eng.frequency,
+            "power_w": c.current_power_watts,
+        })
+        next_t = eng.clock + 30.0
     fin = eng.finished
     tpot = float(np.mean([r.tpot for r in fin if r.tpot is not None]))
     ttft = float(np.mean([r.ttft for r in fin]))

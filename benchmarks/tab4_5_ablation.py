@@ -8,18 +8,22 @@ import dataclasses
 import numpy as np
 
 from benchmarks.common import make_engine, save_json
-from repro.core import AGFTConfig, AGFTTuner
+from repro.core import AGFTConfig
 from repro.core.pruning import PruningConfig
 from repro.energy import A6000
+from repro.policies import get_policy
 from repro.workloads import PROTOTYPES, generate_requests
 
 
-def _run(tcfg: AGFTConfig, n_requests: int, rate: float, seed: int):
+def _run(tcfg: AGFTConfig, n_requests: int, rate: float, seed: int,
+         policy: str = "agft"):
     eng = make_engine()
     eng.submit(generate_requests(PROTOTYPES["normal"], n_requests,
                                  base_rate=rate, seed=seed))
-    tuner = AGFTTuner(A6000, tcfg)
-    eng.drain(tuner=tuner)
+    # any registered windowed policy works here; only agft takes a cfg
+    tuner = get_policy(policy, hardware=A6000,
+                       **({"cfg": tcfg} if policy == "agft" else {}))
+    eng.drain(policy=tuner)
     ws = [h for h in tuner.history
           if h["energy_j"] is not None and h["tpot"] is not None]
     energy = np.array([h["energy_j"] for h in ws])
@@ -33,15 +37,16 @@ def _run(tcfg: AGFTConfig, n_requests: int, rate: float, seed: int):
         m = float(np.mean(x))
         return {"mean": m, "cv": float(np.std(x) / m) if m else 0.0}
 
+    pruner = getattr(tuner, "pruner", None)
     return {"energy": stats(energy), "edp": stats(edp),
             "tpot": stats(tpot), "ttft": stats(ttft), "e2e": stats(e2e),
-            "pruned": len(tuner.pruner.permanently_pruned),
+            "pruned": len(pruner.permanently_pruned) if pruner else 0,
             "n_windows": len(ws)}
 
 
 def run(n_requests: int = 1500, rate: float = 3.0, seed: int = 2,
-        quiet: bool = False):
-    full = _run(AGFTConfig(), n_requests, rate, seed)
+        policy: str = "agft", quiet: bool = False):
+    full = _run(AGFTConfig(), n_requests, rate, seed, policy=policy)
     nograin = _run(AGFTConfig(fine_grained=False), n_requests, rate, seed)
     nopruning = _run(
         AGFTConfig(pruning=PruningConfig(enabled=False)),

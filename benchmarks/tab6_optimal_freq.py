@@ -6,8 +6,7 @@ import numpy as np
 
 from benchmarks.common import load_json, make_engine, save_json
 from benchmarks.fig5_workloads import WORKLOADS
-from repro.core import AGFTTuner
-from repro.energy import A6000
+from repro.policies import get_policy
 from repro.workloads import PROTOTYPES, generate_requests
 
 PAPER = {  # (offline MHz, online MHz, deviation %)
@@ -26,8 +25,8 @@ def online_frequency(workload: str, *, n_requests: int = 1500,
     eng = make_engine()
     eng.submit(generate_requests(PROTOTYPES[workload], n_requests,
                                  base_rate=rate, seed=seed))
-    tuner = AGFTTuner(A6000)
-    eng.drain(tuner=tuner)
+    tuner = get_policy("agft")
+    eng.drain(policy=tuner)
     post = [h["freq"] for h in tuner.history if h["converged"]]
     if not post:   # fall back to the greedy choice distribution
         post = [h["freq"] for h in tuner.history[-50:]]

@@ -1,6 +1,8 @@
-"""Fleet-level AGFT (beyond-paper): a 4-node cluster with per-node tuners
-and a length-segregating router — nodes specialize and learn different
-frequencies for their traffic class.
+"""Fleet-level AGFT (beyond-paper): a 4-node cluster with per-node power
+policies and a length-segregating router — nodes specialize and learn
+different frequencies for their traffic class. Also shows a heterogeneous
+per-node policy mix (AGFT on the long-context half, an SLO controller and
+the ondemand governor on the chat half) through the same shared driver.
 
   PYTHONPATH=src python examples/cluster_serving.py
 """
@@ -34,12 +36,24 @@ def main():
           f" kJ ({100*(1-t.energy_j/b.energy_j):+.1f}%)")
     print(f"fleet EDP    : {t.edp:9.1f} vs {b.edp:9.1f} "
           f"({100*(1-t.edp/b.edp):+.1f}%)")
-    for i, tun in enumerate(tuned.tuners):
+    for i, tun in enumerate(tuned.policies):
         post = [h["freq"] for h in tun.history if h["converged"]]
         kind = "long-context" if i < 2 else "chat"
         f = np.mean(post) if post else float("nan")
         print(f"node {i} ({kind:12s}): learned f* = {f:6.0f} MHz "
               f"({len(post)} exploit windows)")
+
+    # heterogeneous per-node mix through the same driver: AGFT where the
+    # traffic is hard, cheaper controllers where it is predictable
+    mixed = ServingCluster(cfg, n_nodes=4, router=route_by_length,
+                           policies=["agft", "agft", "slo", "ondemand"])
+    mixed.submit(trace())
+    mixed.drain()
+    m = mixed.summary()
+    print(f"mixed fleet  : {m.energy_j/1e3:9.1f} kJ "
+          f"({100*(1-m.energy_j/b.energy_j):+.1f}% vs baseline), "
+          f"node policies = "
+          f"{[type(p).__name__ for p in mixed.policies]}")
 
 
 if __name__ == "__main__":

@@ -9,8 +9,8 @@ fingerprint is designed to expose.
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import AGFTTuner
 from repro.energy import A6000
+from repro.policies import get_policy
 from repro.serving import EngineConfig, InferenceEngine
 from repro.workloads import PROTOTYPES, generate_requests
 
@@ -29,8 +29,8 @@ def main():
                                   initial_frequency=A6000.f_max)
             eng.submit(generate_requests(PROTOTYPES["normal"], 600,
                                          base_rate=3.0, seed=5))
-            tuner = AGFTTuner(A6000) if with_tuner else None
-            eng.drain(tuner=tuner)
+            tuner = get_policy("agft") if with_tuner else None
+            eng.drain(policy=tuner)
             fin = eng.finished
             tpot = float(np.mean([r.tpot for r in fin
                                   if r.tpot is not None]))

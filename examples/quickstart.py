@@ -3,25 +3,27 @@
 Builds the continuous-batching engine for the paper's Llama-3-3B serving
 setup (simulated A6000 DVFS backend), runs the 'normal' workload prototype
 with and without AGFT, and prints the energy/latency/EDP comparison.
+Any registered power policy drops in the same way — try
+``get_policy("ondemand")`` or ``get_policy("static", frequency_mhz=1200)``.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import AGFTTuner
 from repro.energy import A6000
+from repro.policies import get_policy
 from repro.serving import EngineConfig, InferenceEngine
 from repro.workloads import PROTOTYPES, generate_requests
 
 
-def serve(tuner=None, n=800, seed=7):
+def serve(policy=None, n=800, seed=7):
     engine = InferenceEngine(get_config("llama3-3b"), EngineConfig(),
                              hardware=A6000,
                              initial_frequency=A6000.f_max)
     engine.submit(generate_requests(PROTOTYPES["normal"], n,
                                     base_rate=3.0, seed=seed))
-    engine.drain(tuner=tuner)
+    engine.drain(policy=policy)
     fin = engine.finished
     tpot = float(np.mean([r.tpot for r in fin if r.tpot is not None]))
     return {
@@ -36,8 +38,8 @@ def main():
     print("baseline (unlocked frequency)...")
     base = serve()
     print("AGFT (online contextual bandit)...")
-    tuner = AGFTTuner(A6000)
-    agft = serve(tuner=tuner)
+    tuner = get_policy("agft")
+    agft = serve(policy=tuner)
 
     print(f"\n{'metric':10s} {'baseline':>12s} {'AGFT':>12s} {'diff':>8s}")
     for k in ("energy_j", "ttft_s", "tpot_s", "edp"):

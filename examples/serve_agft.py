@@ -10,8 +10,8 @@ import argparse
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import AGFTTuner
 from repro.energy import A6000
+from repro.policies import get_policy
 from repro.serving import EngineConfig, InferenceEngine
 from repro.workloads import generate_azure_trace
 
@@ -20,20 +20,18 @@ def run(duration, rate, seed, with_tuner, report_every=300.0):
     eng = InferenceEngine(get_config("llama3-3b"), EngineConfig(),
                           hardware=A6000, initial_frequency=A6000.f_max)
     eng.submit(generate_azure_trace(duration, base_rate=rate, seed=seed))
-    tuner = AGFTTuner(A6000) if with_tuner else None
+    tuner = get_policy("agft") if with_tuner else None
     next_report = report_every
     while eng.has_work:
-        eng.step()
-        if tuner:
-            tuner.maybe_act(eng)
-        if with_tuner and eng.clock >= next_report:
+        eng.run_until(next_report, policy=tuner)
+        if with_tuner and eng.has_work:
             c = eng.metrics.c
             print(f"  t={eng.clock:7.0f}s f={eng.frequency:6.0f}MHz "
                   f"P={c.current_power_watts:5.1f}W "
                   f"E={c.energy_joules_total/1e3:8.1f}kJ "
                   f"run={c.requests_running:3d} wait={c.requests_waiting:4d} "
                   f"{'EXPLOIT' if tuner.converged else 'explore'}")
-            next_report = eng.clock + report_every
+        next_report = eng.clock + report_every
     return eng, tuner
 
 

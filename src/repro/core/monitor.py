@@ -1,0 +1,53 @@
+"""Telemetry monitor: the Prometheus-boundary observation window.
+
+The paper's monitor (§4.1 "Periodic Metric Acquisition") polls the engine's
+metrics endpoint on a fixed sampling period and differences consecutive
+snapshots into per-window aggregates. That windowing used to live inside
+``AGFTTuner.act``; it is policy-agnostic, so it lives here and every power
+policy (AGFT, ondemand, SLO-aware, ...) observes the engine through the
+same ``WindowStats`` boundary — aggregate counters only, never per-request
+state (the privacy contract in ``serving.request``).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+from repro.energy.edp import WindowStats, diff_snapshots
+
+
+class TelemetryMonitor:
+    """Samples ``engine.metrics.snapshot()`` on a fixed cadence and diffs
+    consecutive snapshots into :class:`WindowStats`.
+
+    Usage::
+
+        if monitor.due(engine):
+            window = monitor.observe(engine)   # None on the first sample
+    """
+
+    def __init__(self, sampling_period_s: float = 0.8):
+        self.sampling_period_s = sampling_period_s
+        self.prev_snapshot: Optional[Dict[str, float]] = None
+        self.prev_time = 0.0
+        self.next_sample = 0.0
+
+    def due(self, engine) -> bool:
+        """True once the engine clock has crossed the next sample point."""
+        return engine.clock >= self.next_sample
+
+    def observe(self, engine) -> Optional[WindowStats]:
+        """Snapshot now and return the window since the previous snapshot.
+
+        Returns ``None`` on the first observation (no window exists yet);
+        either way the sampling window is (re)armed from the current clock.
+        """
+        now = engine.clock
+        snap = engine.metrics.snapshot()
+        window = None
+        if self.prev_snapshot is not None:
+            window = diff_snapshots(self.prev_snapshot, snap,
+                                    max(now - self.prev_time, 1e-9))
+        self.prev_snapshot = snap
+        self.prev_time = now
+        self.next_sample = now + self.sampling_period_s
+        return window

@@ -6,8 +6,11 @@ Wires the pieces together on the monitor's sampling cadence:
   action selection (UCB exploration / greedy exploitation, gated by the
   Page-Hinkley convergence detector) -> frequency actuation.
 
-The tuner touches the engine ONLY through (a) the metrics snapshot and
-(b) ``set_frequency`` — the non-invasive boundary the paper requires.
+The tuner touches the engine ONLY through (a) the metrics snapshot —
+windowed by the shared :class:`repro.core.monitor.TelemetryMonitor` — and
+(b) ``set_frequency``, the non-invasive boundary the paper requires. It
+conforms to the ``repro.policies.PowerPolicy`` protocol and is registered
+in the policy registry as ``"agft"``.
 """
 from __future__ import annotations
 
@@ -18,11 +21,11 @@ import numpy as np
 
 from repro.core.features import FeatureExtractor, FeatureScales
 from repro.core.linucb import LinUCBBank
+from repro.core.monitor import TelemetryMonitor
 from repro.core.page_hinkley import ConvergenceConfig, ConvergenceDetector
 from repro.core.pruning import PruningConfig, PruningFramework
 from repro.core.refinement import MixedMaturityRefinement, RefinementConfig
 from repro.core.reward import RewardCalculator, RewardConfig
-from repro.energy.edp import diff_snapshots
 from repro.energy.power_model import HardwareSpec
 
 
@@ -74,11 +77,9 @@ class AGFTTuner:
 
         # closed-loop state
         self.round = 0
-        self.prev_snapshot = None
-        self.prev_time = 0.0
+        self.monitor = TelemetryMonitor(self.cfg.sampling_period_s)
         self.prev_action: Optional[float] = None
         self.prev_context: Optional[np.ndarray] = None
-        self.next_sample = 0.0
         self.history: List[dict] = []
 
     # ------------------------------------------------------------------
@@ -96,27 +97,22 @@ class AGFTTuner:
 
     # ------------------------------------------------------------------
     def maybe_act(self, engine) -> Optional[float]:
-        """Called after every engine step; acts when the sampling window
-        has elapsed. Returns the chosen frequency when it acts."""
-        if engine.clock < self.next_sample:
+        """PowerPolicy entrypoint: called after every engine step; acts when
+        the sampling window has elapsed. Returns the chosen frequency when
+        it acts."""
+        if not self.monitor.due(engine):
             return None
         return self.act(engine)
 
     def act(self, engine) -> float:
-        now = engine.clock
-        snap = engine.metrics.snapshot()
-        if self.prev_snapshot is None:
-            # first observation: just set up the window and take the floor
-            self.prev_snapshot = snap
-            self.prev_time = now
-            self.next_sample = now + self.cfg.sampling_period_s
+        window = self.monitor.observe(engine)
+        if window is None:
+            # first observation: the monitor armed the window; take the floor
             f0 = self.bank.select_ucb(np.zeros(self.features.dim),
                                       self.cfg.ucb_alpha)
             self._actuate(engine, f0, None, None, None)
             return f0
 
-        window = diff_snapshots(self.prev_snapshot, snap,
-                                max(now - self.prev_time, 1e-9))
         x_t = self.features(window)
 
         # 1. credit the previous action
@@ -148,10 +144,7 @@ class AGFTTuner:
             f = self.bank.select_ucb(x_t, self.cfg.ucb_alpha)
             phase = "explore"
 
-        # 4. actuate + bookkeeping
-        self.prev_snapshot = snap
-        self.prev_time = now
-        self.next_sample = now + self.cfg.sampling_period_s
+        # 4. actuate + bookkeeping (the monitor already re-armed the window)
         self._actuate(engine, f, reward, window, phase, x_t)
         return f
 

@@ -224,11 +224,20 @@ def _cost_variant(cfg, u: int):
     return cfg.replace(num_layers=prefix + u, unroll_layers=True)
 
 
+def _cost_dict(compiled) -> dict:
+    """cost_analysis() returns a dict on jax >= 0.6 but a one-element list
+    of dicts on older releases; normalize to a dict."""
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
 def _compile_cost(arch, shape_name, mesh, cfg, donate: bool = False):
     fn, args = build_lowering(arch, shape_name, mesh, cfg_override=cfg,
                               donate=donate)
     compiled = fn.lower(*args).compile()
-    cost = compiled.cost_analysis() or {}
+    cost = _cost_dict(compiled)
     coll = collective_bytes(compiled.as_text())
     mem = compiled.memory_analysis()
     return {"flops": cost.get("flops", 0.0),
@@ -283,7 +292,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         lowered = fn.lower(*args)
         compiled = lowered.compile()
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        cost = _cost_dict(compiled)
         coll = collective_bytes(compiled.as_text())
         extra = cost_extrapolated(arch, shape_name, mesh) \
             if extrapolate else None

@@ -6,22 +6,30 @@ jax device state (device count is locked at first jax init, and only
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:                                   # jax >= 0.5
+    from jax.sharding import AxisType
+except ImportError:                    # older jax: meshes are Auto-only
+    AxisType = None
+
+
+def _make_mesh(shape, axes):
+    if AxisType is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips/pod (TPU v5e); multi_pod adds a 2-pod outer axis."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_debug_mesh(n_data: int = 2, n_model: int = 4, *,
                     multi_pod: bool = False):
     """Small mesh for CI-scale dry-run tests (8-16 host devices)."""
     if multi_pod:
-        return jax.make_mesh((2, n_data, n_model), ("pod", "data", "model"),
-                             axis_types=(AxisType.Auto,) * 3)
-    return jax.make_mesh((n_data, n_model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+        return _make_mesh((2, n_data, n_model), ("pod", "data", "model"))
+    return _make_mesh((n_data, n_model), ("data", "model"))

@@ -1,10 +1,12 @@
 """Serving driver: run the continuous-batching engine under a workload with
-or without the AGFT tuner.
+any registered power policy (or none).
 
   python -m repro.launch.serve --arch llama3-3b --workload normal \
-      --requests 2000 --tuner agft
+      --requests 2000 --policy agft
   python -m repro.launch.serve --arch llama3-3b --workload azure \
-      --duration 3600 --tuner none
+      --duration 3600 --policy slo
+  python -m repro.launch.serve --workload normal --policy none \
+      --frequency 1200
 """
 from __future__ import annotations
 
@@ -14,8 +16,8 @@ import json
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import AGFTConfig, AGFTTuner
 from repro.energy import A6000, TPU_V5E
+from repro.policies import available_policies, get_policy
 from repro.serving import EngineConfig, InferenceEngine
 from repro.workloads import (PROTOTYPES, generate_azure_trace,
                              generate_requests)
@@ -52,14 +54,20 @@ def summarize(engine: InferenceEngine, tuner=None) -> dict:
                         if engine.clock else 0.0),
     }
     if tuner is not None:
-        out["tuner"] = {
-            "rounds": tuner.round,
-            "converged_round": tuner.converged_round,
-            "reopened": tuner.convergence.reopened,
-            "pruned": len(tuner.pruner.permanently_pruned),
-            "refinements": len(tuner.refiner.log),
-            "arms": len(tuner.bank.arms),
-        }
+        out["policy"] = type(tuner).__name__
+        if hasattr(tuner, "bank"):   # AGFT-specific learning state
+            out["tuner"] = {
+                "rounds": tuner.round,
+                "converged_round": tuner.converged_round,
+                "reopened": tuner.convergence.reopened,
+                "pruned": len(tuner.pruner.permanently_pruned),
+                "refinements": len(tuner.refiner.log),
+                "arms": len(tuner.bank.arms),
+            }
+        elif getattr(tuner, "history", None):
+            acted = [h for h in tuner.history if h.get("acted")]
+            out["tuner"] = {"windows": len(tuner.history),
+                            "actions": len(acted)}
     return out
 
 
@@ -74,9 +82,11 @@ def main():
     ap.add_argument("--duration", type=float, default=0.0,
                     help="azure trace duration (sim seconds)")
     ap.add_argument("--rate", type=float, default=3.0)
-    ap.add_argument("--tuner", default="agft", choices=["agft", "none"])
+    ap.add_argument("--policy", "--tuner", dest="policy", default="agft",
+                    choices=available_policies() + ["none"])
     ap.add_argument("--frequency", type=float, default=0.0,
-                    help="fixed frequency for --tuner none (0 = f_max)")
+                    help="fixed frequency for --policy none/static "
+                         "(0 = f_max / the static default)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="")
     args = ap.parse_args()
@@ -91,11 +101,15 @@ def main():
                                      args.requests, base_rate=args.rate,
                                      seed=args.seed))
     tuner = None
-    if args.tuner == "agft":
-        tuner = AGFTTuner(HARDWARE[args.hardware], AGFTConfig())
+    if args.policy != "none":
+        kw = ({"frequency_mhz": args.frequency}
+              if args.policy in ("static", "oracle") and args.frequency
+              else {})
+        tuner = get_policy(args.policy, hardware=HARDWARE[args.hardware],
+                           **kw)
     elif args.frequency:
         eng.set_frequency(args.frequency)
-    eng.drain(tuner=tuner)
+    eng.drain(policy=tuner)
     summary = summarize(eng, tuner)
     print(json.dumps(summary, indent=1))
     if args.out:

@@ -1,0 +1,58 @@
+"""Pluggable power policies: interchangeable GPU-frequency controllers.
+
+Every controller implements the :class:`PowerPolicy` protocol — a single
+``maybe_act(engine) -> Optional[float]`` hook the shared drive loop
+(``repro.serving.driver``) calls after each engine step. Policies observe
+the engine exclusively through the Prometheus-boundary telemetry window
+(:class:`repro.core.monitor.TelemetryMonitor` -> ``WindowStats``) and
+actuate exclusively through ``engine.set_frequency`` — the paper's
+non-invasive contract, now enforced for *all* baselines so comparisons
+(paper Tables 2/3, GreenLLM-style SLO control, OS governors) run on equal
+footing over the same trace.
+
+Built-in registry entries
+-------------------------
+``agft``      the paper's contextual-bandit tuner (LinUCB + pruning +
+              refinement + Page-Hinkley convergence)
+``static``    one fixed frequency for the whole run (locked clocks)
+``oracle``    best *fixed* frequency from an offline EDP sweep
+``ondemand``  utilization-threshold rule DVFS (Linux ondemand style)
+``slo``       TPOT-budget AIMD feedback controller (GreenLLM-style)
+``observer``  records telemetry windows, never actuates (exact baseline
+              time series for phase benchmarks)
+
+Registering a new policy
+------------------------
+Subclass :class:`WindowedPolicy` (or provide any object with
+``maybe_act``) and register a factory taking ``(hardware, **kwargs)``::
+
+    from repro.policies import WindowedPolicy, register_policy
+
+    @register_policy("powersave")
+    class PowersavePolicy(WindowedPolicy):
+        phase_name = "powersave"
+        def decide(self, window, engine):
+            return self.hw.f_min
+
+    get_policy("powersave")                    # constructs with defaults
+    get_policy("powersave", sampling_period_s=0.4)
+
+Classes register directly because they are callable with the factory
+signature; plain functions work too (see ``agft.py``). Names are
+case-insensitive and must be unique. Per-node heterogeneous mixes are
+first-class: ``ServingCluster(..., policies=["agft", "slo", None])``
+resolves names through this registry.
+"""
+from repro.policies.base import (PowerPolicy, TelemetryRecorder,
+                                 WindowedPolicy)
+from repro.policies.registry import (available_policies, get_policy,
+                                     register_policy)
+from repro.policies.fixed import (OracleFixedPolicy, StaticPolicy,
+                                  snap_to_grid)
+from repro.policies.rules import OndemandPolicy, SLOAwareLatencyPolicy
+from repro.policies.agft import make_agft
+
+__all__ = ["PowerPolicy", "WindowedPolicy", "TelemetryRecorder",
+           "available_policies", "get_policy", "register_policy",
+           "StaticPolicy", "OracleFixedPolicy", "OndemandPolicy",
+           "SLOAwareLatencyPolicy", "make_agft", "snap_to_grid"]

@@ -1,0 +1,25 @@
+"""Registry entry for the paper's tuner: AGFT *is* a PowerPolicy.
+
+``AGFTTuner`` already conforms structurally (``maybe_act(engine) ->
+Optional[float]``, telemetry via the shared ``TelemetryMonitor``); this
+module only adapts its constructor signature to the registry's
+``(hardware, **kwargs)`` convention.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.core.tuner import AGFTConfig, AGFTTuner
+from repro.energy.power_model import HardwareSpec
+from repro.policies.registry import register_policy
+
+
+@register_policy("agft")
+def make_agft(hardware: HardwareSpec, cfg: Optional[AGFTConfig] = None,
+              **kwargs) -> AGFTTuner:
+    """``get_policy("agft")`` | ``get_policy("agft", cfg=AGFTConfig(...))``
+    | ``get_policy("agft", strategy="thompson", ...)`` — extra kwargs are
+    AGFTConfig fields."""
+    if cfg is not None and kwargs:
+        raise TypeError("pass either cfg= or AGFTConfig field kwargs")
+    return AGFTTuner(hardware, cfg or AGFTConfig(**kwargs))

@@ -1,0 +1,96 @@
+"""PowerPolicy protocol and the windowed-policy base class.
+
+A power policy is anything with ``maybe_act(engine) -> Optional[float]``:
+called after every engine step, it may read the engine's aggregate metrics
+and actuate ``engine.set_frequency``; it returns the chosen frequency when
+it acts and ``None`` otherwise. The shared drive loop
+(``repro.serving.driver``) calls nothing else, so AGFT, rule-based
+governors and SLO controllers are interchangeable behind this boundary.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Protocol, runtime_checkable
+
+from repro.core.monitor import TelemetryMonitor
+from repro.energy.edp import WindowStats
+from repro.energy.power_model import HardwareSpec
+from repro.policies.registry import register_policy
+
+
+@runtime_checkable
+class PowerPolicy(Protocol):
+    """Structural interface every frequency controller implements."""
+
+    def maybe_act(self, engine) -> Optional[float]:
+        """Observe the engine (aggregate metrics only) and optionally set
+        its frequency; return the actuated frequency, else ``None``."""
+        ...
+
+
+class WindowedPolicy:
+    """Base for policies that decide once per telemetry window.
+
+    Owns a :class:`TelemetryMonitor` so every subclass observes the engine
+    through the same Prometheus-boundary ``WindowStats`` the paper's monitor
+    produces, and records an AGFT-compatible ``history`` of per-window
+    decisions (``t``/``freq``/``energy_j``/``tpot``/``edp``/``phase``) so
+    benchmarks can treat all policies uniformly.
+
+    Subclasses implement ``decide(window, engine) -> Optional[float]``;
+    the returned frequency is clamped to the hardware envelope and actuated.
+    """
+
+    #: label recorded in history rows; subclasses override
+    phase_name = "rule"
+
+    def __init__(self, hardware: HardwareSpec,
+                 sampling_period_s: float = 0.8):
+        self.hw = hardware
+        self.monitor = TelemetryMonitor(sampling_period_s)
+        self.history: List[dict] = []
+
+    # ------------------------------------------------------------------
+    def maybe_act(self, engine) -> Optional[float]:
+        if not self.monitor.due(engine):
+            return None
+        window = self.monitor.observe(engine)
+        f = self.decide(window, engine)
+        if f is not None:
+            f = float(min(max(f, self.hw.f_min), self.hw.f_max))
+            engine.set_frequency(f)
+        self._record(engine, f, window)
+        return f
+
+    def decide(self, window: Optional[WindowStats],
+               engine) -> Optional[float]:
+        """Per-window decision; ``window`` is ``None`` on the first sample."""
+        raise NotImplementedError
+
+    # ------------------------------------------------------------------
+    def _record(self, engine, f: Optional[float],
+                window: Optional[WindowStats]) -> None:
+        self.history.append({
+            "t": engine.clock,
+            "freq": float(engine.frequency),
+            "reward": None,
+            "edp": window.edp if window else None,
+            "energy_j": window.energy_j if window else None,
+            "tpot": window.effective_tpot if window else None,
+            "phase": self.phase_name if window else "warmup",
+            "acted": f is not None,
+        })
+
+
+@register_policy("observer")
+class TelemetryRecorder(WindowedPolicy):
+    """Observe-only policy: records per-window telemetry, never actuates.
+
+    Attach it to a baseline (fixed-frequency) engine so time-windowed
+    energy/latency series are measured exactly — replacing the old
+    average-power estimate in the phase benchmarks.
+    """
+
+    phase_name = "observe"
+
+    def decide(self, window, engine):
+        return None

@@ -1,0 +1,41 @@
+"""Name-keyed policy registry.
+
+Factories take ``(hardware, **kwargs)`` and return a ``PowerPolicy``.
+Registering a class works because classes are callable with that
+signature; any callable does.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List
+
+from repro.energy.power_model import A6000, HardwareSpec
+
+_REGISTRY: Dict[str, Callable] = {}
+
+
+def register_policy(name: str) -> Callable:
+    """Decorator: ``@register_policy("static")`` on a class or factory."""
+    def deco(factory: Callable) -> Callable:
+        key = name.lower()
+        if key in _REGISTRY:
+            raise ValueError(f"policy {name!r} already registered")
+        _REGISTRY[key] = factory
+        return factory
+    return deco
+
+
+def get_policy(name: str, hardware: HardwareSpec = A6000, **kwargs):
+    """Construct a registered policy by name.
+
+    >>> get_policy("agft")          # paper tuner, default config
+    >>> get_policy("static", frequency_mhz=1200.0)
+    """
+    key = name.lower()
+    if key not in _REGISTRY:
+        raise KeyError(f"unknown policy {name!r}; available: "
+                       f"{', '.join(available_policies())}")
+    return _REGISTRY[key](hardware, **kwargs)
+
+
+def available_policies() -> List[str]:
+    return sorted(_REGISTRY)

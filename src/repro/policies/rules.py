@@ -1,0 +1,96 @@
+"""Reactive rule-based governors: utilization-threshold DVFS and an
+SLO-aware latency feedback controller.
+
+These are the competing controllers the paper's evaluation is implicitly
+measured against: ``ondemand`` is the classic OS governor (scales with raw
+utilization, blind to the serving phase mix), ``slo`` is a GreenLLM-style
+(arXiv:2508.16449) TPOT-budget controller — minimize frequency subject to
+a latency budget, with AIMD dynamics (additive down-steps while the budget
+has headroom, multiplicative recovery on violation).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.energy.power_model import HardwareSpec
+from repro.policies.base import WindowedPolicy
+from repro.policies.fixed import snap_to_grid
+from repro.policies.registry import register_policy
+
+
+@register_policy("ondemand")
+class OndemandPolicy(WindowedPolicy):
+    """Linux-ondemand-style governor on the telemetry window.
+
+    util = busy_s / window duration. Above ``up_threshold`` jump straight
+    to f_max; below it scale the target proportionally (f_max * util /
+    up_threshold). Phase-blind by construction: a fully-busy memory-bound
+    decode window looks identical to a compute-bound prefill window, so it
+    never finds the interior EDP optimum — exactly the failure mode that
+    motivates AGFT.
+    """
+
+    phase_name = "ondemand"
+
+    def __init__(self, hardware: HardwareSpec,
+                 up_threshold: float = 0.8,
+                 sampling_period_s: float = 0.8):
+        super().__init__(hardware, sampling_period_s)
+        self.up_threshold = up_threshold
+
+    def decide(self, window, engine) -> Optional[float]:
+        if window is None:
+            return self.hw.f_max
+        util = window.busy_s / max(window.duration_s, 1e-9)
+        if util >= self.up_threshold:
+            return self.hw.f_max
+        return snap_to_grid(self.hw.f_max * util / self.up_threshold,
+                            self.hw)
+
+
+@register_policy("slo")
+class SLOAwareLatencyPolicy(WindowedPolicy):
+    """TPOT-budget feedback controller (GreenLLM-style).
+
+    Tracks the window's effective TPOT against a budget and walks the
+    frequency down while latency has headroom, recovering multiplicatively
+    on violation (latency safety beats energy). The budget is either given
+    explicitly (``tpot_slo_s``) or self-calibrated as ``(1 +
+    overhead_budget)`` x the first productive window's TPOT at the initial
+    (default f_max) frequency — i.e. "spend at most the paper's <10%
+    latency overhead".
+    """
+
+    phase_name = "slo"
+
+    def __init__(self, hardware: HardwareSpec,
+                 tpot_slo_s: Optional[float] = None,
+                 overhead_budget: float = 0.10,
+                 headroom: float = 0.9,
+                 down_step_mhz: Optional[float] = None,
+                 boost: float = 1.25,
+                 sampling_period_s: float = 0.8):
+        super().__init__(hardware, sampling_period_s)
+        self.tpot_slo_s = tpot_slo_s
+        self.overhead_budget = overhead_budget
+        self.headroom = headroom
+        self.down_step_mhz = down_step_mhz or 2 * hardware.f_step
+        self.boost = boost
+
+    def decide(self, window, engine) -> Optional[float]:
+        if window is None or window.generation_tokens <= 0:
+            return None
+        tpot = window.effective_tpot
+        if self.tpot_slo_s is None:
+            # calibrate the budget off the reference window and hold
+            self.tpot_slo_s = tpot * (1.0 + self.overhead_budget)
+            return None
+        f = engine.frequency
+        if tpot > self.tpot_slo_s:
+            # violation: multiplicative recovery (at least two grid steps)
+            return snap_to_grid(max(f * self.boost,
+                                    f + 2 * self.hw.f_step), self.hw)
+        if tpot < self.headroom * self.tpot_slo_s:
+            # headroom: additive decrease toward the energy-optimal floor
+            return snap_to_grid(f - self.down_step_mhz, self.hw)
+        return None

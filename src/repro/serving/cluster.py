@@ -1,25 +1,34 @@
 """Fleet-level serving (beyond paper — its conclusion targets "LLM
-inference clusters"): N engine replicas, each with its OWN AGFT tuner
-(per-node closed loops, no cross-node coordination needed — the paper's
-privacy/minimal-intrusion story holds per node), plus a load-aware router.
+inference clusters"): N engine replicas, each governed by its OWN power
+policy (per-node closed loops, no cross-node coordination needed — the
+paper's privacy/minimal-intrusion story holds per node), plus a
+load-aware router.
 
-Because each node learns from its own fingerprint stream, heterogeneous
-traffic splits (e.g. a router that segregates long-context from chat
-traffic) let different nodes converge to DIFFERENT frequencies — fleet
-energy beyond what one global setting achieves.
+Policies are per-node and heterogeneous: ``policies=["agft", "slo",
+None]`` gives node 0 the paper tuner, node 1 a GreenLLM-style SLO
+controller, and leaves node 2 at fixed clocks — all driven by the shared
+event loop in ``repro.serving.driver``. Because each node learns from its
+own fingerprint stream, heterogeneous traffic splits (e.g. a router that
+segregates long-context from chat traffic) let different nodes converge
+to DIFFERENT frequencies — fleet energy beyond what one global setting
+achieves.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional
+from typing import Callable, List, Optional, Sequence, Union
 
 import numpy as np
 
-from repro.core import AGFTConfig, AGFTTuner
+from repro.core import AGFTConfig
 from repro.energy import A6000, HardwareSpec
 from repro.models.common import ModelConfig
+from repro.policies import get_policy
+from repro.serving.driver import EngineNode, drive
 from repro.serving.engine import EngineConfig, InferenceEngine
 from repro.serving.request import Request
+
+PolicySpec = Union[str, None, object]   # registry name | None | instance
 
 
 def route_least_loaded(engines: List[InferenceEngine],
@@ -62,45 +71,69 @@ class ServingCluster:
                  engine_cfg: Optional[EngineConfig] = None,
                  tuner_cfg: Optional[AGFTConfig] = None,
                  with_tuners: bool = True,
+                 policies: Optional[Sequence[PolicySpec]] = None,
                  router: Callable = route_least_loaded):
-        self.engines = [InferenceEngine(model_cfg,
-                                        engine_cfg or EngineConfig(),
-                                        hardware=hardware,
-                                        initial_frequency=hardware.f_max)
-                        for _ in range(n_nodes)]
-        self.tuners = [AGFTTuner(hardware, tuner_cfg or AGFTConfig())
-                       if with_tuners else None for _ in range(n_nodes)]
+        """``policies`` takes one entry per node — a registry name, a
+        ready policy instance, or None (fixed clocks). When omitted,
+        ``with_tuners`` keeps the legacy behaviour: an AGFT tuner per node
+        (``tuner_cfg`` applies) or no policy at all."""
+        engines = [InferenceEngine(model_cfg,
+                                   engine_cfg or EngineConfig(),
+                                   hardware=hardware,
+                                   initial_frequency=hardware.f_max)
+                   for _ in range(n_nodes)]
+        if policies is None:
+            policies = (["agft"] * n_nodes if with_tuners
+                        else [None] * n_nodes)
+        if len(policies) != n_nodes:
+            raise ValueError(f"got {len(policies)} policies for "
+                             f"{n_nodes} nodes")
+        resolved = []
+        for spec in policies:
+            if isinstance(spec, str):
+                kw = ({"cfg": tuner_cfg}
+                      if spec == "agft" and tuner_cfg is not None else {})
+                spec = get_policy(spec, hardware=hardware, **kw)
+            resolved.append(spec)
+        self.nodes = [EngineNode(e, p) for e, p in zip(engines, resolved)]
         self.router = router
+
+    # ------------------------------------------------------------------
+    @property
+    def engines(self) -> List[InferenceEngine]:
+        return [n.engine for n in self.nodes]
+
+    @property
+    def policies(self) -> List[Optional[object]]:
+        return [n.policy for n in self.nodes]
+
+    #: legacy alias from the AGFT-only era
+    tuners = policies
 
     # ------------------------------------------------------------------
     def submit(self, requests: List[Request]) -> None:
         """Route each request at its arrival time (arrival order)."""
+        engines = self.engines
         for req in sorted(requests, key=lambda r: r.arrival_time):
-            idx = self.router(self.engines, req)
-            self.engines[idx].submit([req])
+            idx = self.router(engines, req)
+            engines[idx].submit([req])
 
     @property
     def has_work(self) -> bool:
-        return any(e.has_work for e in self.engines)
+        return any(n.engine.has_work for n in self.nodes)
 
-    def drain(self, max_iters: int = 10_000_000) -> None:
-        """Advance all nodes in lock-step on the slowest clock (nodes are
-        independent; stepping the laggard preserves causality)."""
-        it = 0
-        while self.has_work and it < max_iters:
-            active = [e for e in self.engines if e.has_work]
-            eng = min(active, key=lambda e: e.clock)
-            eng.step()
-            tuner = self.tuners[self.engines.index(eng)]
-            if tuner is not None:
-                tuner.maybe_act(eng)
-            it += 1
+    def drain(self, max_iters: int = 10_000_000) -> int:
+        """Advance all nodes through the shared drive loop (laggard-first;
+        nodes are independent, so stepping the slowest clock preserves
+        causality)."""
+        return drive(self.nodes, max_iters=max_iters)
 
     # ------------------------------------------------------------------
     def summary(self) -> ClusterSummary:
-        fin = [r for e in self.engines for r in e.finished]
+        engines = self.engines
+        fin = [r for e in engines for r in e.finished]
         tpots = [r.tpot for r in fin if r.tpot is not None]
-        energy = sum(e.metrics.c.energy_joules_total for e in self.engines)
+        energy = sum(e.metrics.c.energy_joules_total for e in engines)
         tpot = float(np.mean(tpots)) if tpots else 0.0
         return ClusterSummary(
             energy_j=energy,
@@ -108,7 +141,7 @@ class ServingCluster:
             mean_ttft_s=float(np.mean([r.ttft for r in fin])) if fin else 0,
             mean_tpot_s=tpot,
             edp=energy * tpot,
-            node_frequencies=[e.frequency for e in self.engines],
+            node_frequencies=[e.frequency for e in engines],
             node_energy_j=[e.metrics.c.energy_joules_total
-                           for e in self.engines],
+                           for e in engines],
         )

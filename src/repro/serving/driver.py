@@ -1,0 +1,52 @@
+"""The shared drive loop: one event-driven driver for every serving shape.
+
+``InferenceEngine.run_until/drain`` and ``ServingCluster.drain`` used to
+carry three copies of the same "step, then let the frequency authority
+act" loop — with the cluster variant paying an O(n) ``engines.index``
+lookup per step to find its tuner. This module unifies them: engines are
+paired with their (optional) policy in an :class:`EngineNode`, and
+:func:`drive` advances the laggard node (min simulated clock, via a heap —
+O(log n) per step) until no work remains, invoking each node's attached
+policy after its step. Nodes are independent simulations, so stepping the
+laggard preserves causality; heterogeneous per-node policies are free.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Optional, Sequence
+
+
+@dataclasses.dataclass
+class EngineNode:
+    """An engine paired with the power policy that governs it (or None)."""
+    engine: object                      # InferenceEngine
+    policy: Optional[object] = None     # PowerPolicy
+
+
+def drive(nodes: Sequence[EngineNode], *, t_end: Optional[float] = None,
+          max_iters: int = 10_000_000) -> int:
+    """Advance ``nodes`` in lock-step on the slowest clock.
+
+    Each pop steps the laggard engine once and gives its policy a chance
+    to act (``policy.maybe_act(engine)``). A node leaves the loop when it
+    runs out of work or its clock reaches ``t_end``. Returns the number of
+    engine steps executed.
+    """
+    heap = []
+    for i, node in enumerate(nodes):
+        if node.engine.has_work:
+            heapq.heappush(heap, (node.engine.clock, i))
+    it = 0
+    while heap and it < max_iters:
+        _, i = heapq.heappop(heap)
+        node = nodes[i]
+        eng = node.engine
+        if not eng.has_work or (t_end is not None and eng.clock >= t_end):
+            continue
+        eng.step()
+        if node.policy is not None:
+            node.policy.maybe_act(eng)
+        it += 1
+        heapq.heappush(heap, (eng.clock, i))
+    return it

@@ -16,6 +16,7 @@ import numpy as np
 
 from repro.energy import A6000, DVFSModel, HardwareSpec, iteration_cost
 from repro.models.common import ModelConfig
+from repro.serving.driver import EngineNode, drive
 from repro.serving.kv_cache import PagedKVCache
 from repro.serving.metrics import MetricsExporter
 from repro.serving.request import Request, RequestState
@@ -213,11 +214,12 @@ class InferenceEngine:
             1 for r, _ in plan.prefill if not r.is_prefilling)
         c.iterations_total += 1
         c.requests_finished_total += len(finished)
-        for r, _ in plan.prefill:
-            if (not r.is_prefilling and r.first_token_time is not None
-                    and r.first_token_time == self.clock):
-                c.ttft_seconds_total += r.first_token_time - r.arrival_time
-                c.ttft_count_total += 1
+        # TTFT is accounted when the scheduler assigns first_token_time —
+        # not by replaying a float-equality check against the clock, which
+        # could silently drop samples.
+        for r in self.sched.pop_first_token_events():
+            c.ttft_seconds_total += r.first_token_time - r.arrival_time
+            c.ttft_count_total += 1
         c.prefix_cache_hits_total = self.kv.stats.hits
         c.prefix_cache_queries_total = self.kv.stats.queries
         c.energy_joules_total += energy
@@ -230,18 +232,14 @@ class InferenceEngine:
         return finished
 
     # ------------------------------------------------------------------
-    def run_until(self, t_end: float, tuner=None) -> None:
-        """Advance simulated time to t_end, invoking ``tuner.maybe_act``
-        (if given) on its own sampling cadence."""
-        while self.clock < t_end and self.has_work:
-            self.step()
-            if tuner is not None:
-                tuner.maybe_act(self)
+    def run_until(self, t_end: float, policy=None, *, tuner=None) -> None:
+        """Advance simulated time to t_end through the shared drive loop,
+        invoking the attached policy's ``maybe_act`` on its own cadence.
+        (``tuner=`` is a deprecated alias for ``policy=``.)"""
+        drive([EngineNode(self, policy if policy is not None else tuner)],
+              t_end=t_end)
 
-    def drain(self, tuner=None, max_iters: int = 10_000_000) -> None:
-        it = 0
-        while self.has_work and it < max_iters:
-            self.step()
-            it += 1
-            if tuner is not None:
-                tuner.maybe_act(self)
+    def drain(self, policy=None, max_iters: int = 10_000_000, *,
+              tuner=None) -> None:
+        drive([EngineNode(self, policy if policy is not None else tuner)],
+              max_iters=max_iters)

@@ -50,6 +50,10 @@ class ContinuousBatchingScheduler:
         self.prefill_chunk = prefill_chunk
         self.waiting: List[Request] = []
         self.running: List[Request] = []
+        # requests whose first output token was produced since the last
+        # ``pop_first_token_events`` call — the engine drains this to
+        # account TTFT at assignment time (no float-equality replay)
+        self._first_token_events: List[Request] = []
 
     # ------------------------------------------------------------------
     def add_request(self, req: Request) -> None:
@@ -123,6 +127,11 @@ class ContinuousBatchingScheduler:
         return BatchPlan(prefill=prefill, decode=decode)
 
     # ------------------------------------------------------------------
+    def pop_first_token_events(self) -> List[Request]:
+        """Requests that produced their first token since the last call."""
+        events, self._first_token_events = self._first_token_events, []
+        return events
+
     def complete_iteration(self, plan: BatchPlan, now: float
                            ) -> List[Request]:
         """Apply the iteration's effects; returns newly finished requests."""
@@ -134,6 +143,7 @@ class ContinuousBatchingScheduler:
                 req.generated += 1
                 if req.first_token_time is None:
                     req.first_token_time = now
+                    self._first_token_events.append(req)
                 self.kv.register_prefix(req)
         for req in plan.decode:
             req.generated += 1

@@ -314,6 +314,6 @@ class TestThompsonExtension:
         eng.submit(generate_requests(PROTOTYPES["normal"], 150,
                                      base_rate=3.0, seed=9))
         tuner = AGFTTuner(A6000, AGFTConfig(strategy="thompson"))
-        eng.drain(tuner=tuner)
+        eng.drain(policy=tuner)
         assert len(eng.finished) == 150
         assert tuner.round > 0

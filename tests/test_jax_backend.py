@@ -24,7 +24,7 @@ def test_engine_with_real_jax_execution():
         r.output_len = min(r.output_len, 8)
     eng.submit(reqs)
     tuner = AGFTTuner(A6000, AGFTConfig(sampling_period_s=0.2))
-    eng.drain(tuner=tuner, max_iters=2000)
+    eng.drain(policy=tuner, max_iters=2000)
     assert len(eng.finished) == 6
     assert eng.metrics.c.energy_joules_total > 0
     assert all(r.generated == r.output_len for r in eng.finished)

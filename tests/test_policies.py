@@ -1,0 +1,264 @@
+"""Policy-subsystem tests: registry construction, the shared drive loop on
+engines and clusters (heterogeneous per-node mixes), the AGFT
+decision-history regression against the pre-refactor drive loop, and
+energy/behaviour smoke checks for every registered baseline."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import AGFTTuner, TelemetryMonitor
+from repro.energy import A6000
+from repro.policies import (OndemandPolicy, PowerPolicy, StaticPolicy,
+                            available_policies, get_policy, register_policy,
+                            snap_to_grid)
+from repro.serving import EngineConfig, EngineNode, InferenceEngine, drive
+from repro.serving.cluster import ServingCluster
+from repro.workloads import PROTOTYPES, generate_requests
+
+CFG = get_config("llama3-3b")
+CORE_POLICIES = ("agft", "static", "ondemand", "slo", "oracle")
+
+
+def make_engine(frequency=None):
+    return InferenceEngine(CFG, EngineConfig(),
+                           initial_frequency=frequency or A6000.f_max)
+
+
+def trace(n=80, rate=3.0, seed=21, workload="normal"):
+    return generate_requests(PROTOTYPES[workload], n, base_rate=rate,
+                             seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+class TestRegistry:
+    def test_all_core_policies_construct(self):
+        for name in CORE_POLICIES:
+            p = get_policy(name, hardware=A6000)
+            assert isinstance(p, PowerPolicy)      # structural protocol
+
+    def test_available_lists_core_policies(self):
+        avail = available_policies()
+        for name in CORE_POLICIES + ("observer",):
+            assert name in avail
+
+    def test_unknown_name_raises_with_choices(self):
+        with pytest.raises(KeyError, match="agft"):
+            get_policy("does-not-exist")
+
+    def test_duplicate_registration_rejected(self):
+        with pytest.raises(ValueError):
+            register_policy("static")(StaticPolicy)
+
+    def test_kwargs_reach_constructor(self):
+        p = get_policy("static", frequency_mhz=1200.0)
+        assert p.frequency_mhz == 1200.0
+        t = get_policy("agft", strategy="thompson")
+        assert t.cfg.strategy == "thompson"
+
+
+# ---------------------------------------------------------------------------
+# Shared drive loop
+# ---------------------------------------------------------------------------
+
+class TestDriver:
+    @pytest.mark.parametrize("name", CORE_POLICIES + ("observer",))
+    def test_every_policy_drains_engine(self, name):
+        eng = make_engine()
+        eng.submit(trace(60))
+        eng.drain(policy=get_policy(name, hardware=A6000))
+        assert len(eng.finished) == 60
+        assert A6000.f_min <= eng.frequency <= A6000.f_max
+
+    def test_tuner_kwarg_still_accepted(self):
+        eng = make_engine()
+        eng.submit(trace(30))
+        eng.drain(tuner=get_policy("static"))
+        assert len(eng.finished) == 30
+
+    def test_drive_multi_engine_steps_laggard(self):
+        nodes = []
+        for seed in (1, 2):
+            eng = make_engine()
+            eng.submit(trace(40, seed=seed))
+            nodes.append(EngineNode(eng, None))
+        steps = drive(nodes)
+        assert steps > 0
+        assert all(len(n.engine.finished) == 40 for n in nodes)
+        # lock-step on the slowest clock: final clocks stay comparable
+        clocks = [n.engine.clock for n in nodes]
+        assert max(clocks) < 3 * min(clocks)
+
+    def test_run_until_respects_t_end(self):
+        eng = make_engine()
+        eng.submit(trace(200, rate=1.0))
+        eng.run_until(5.0)
+        assert eng.clock >= 5.0
+        assert eng.has_work                    # plenty of trace left
+
+
+# ---------------------------------------------------------------------------
+# AGFT regression: the refactor must not change decisions
+# ---------------------------------------------------------------------------
+
+class TestAGFTRegression:
+    def _trace_engine(self):
+        eng = make_engine()
+        eng.submit(trace(150, seed=7))
+        return eng
+
+    def test_decision_history_matches_prerefactor_loop(self):
+        """The shared driver must reproduce the pre-refactor drive loop
+        ('step, then tuner.maybe_act') decision-for-decision."""
+        e1, t1 = self._trace_engine(), AGFTTuner(A6000)
+        while e1.has_work:                     # pre-refactor loop, verbatim
+            e1.step()
+            t1.maybe_act(e1)
+
+        e2, t2 = self._trace_engine(), AGFTTuner(A6000)
+        e2.drain(policy=t2)
+
+        assert t1.round == t2.round
+        h1 = [(h["t"], h["freq"], h["phase"]) for h in t1.history]
+        h2 = [(h["t"], h["freq"], h["phase"]) for h in t2.history]
+        assert h1 == h2
+        assert (e1.metrics.c.energy_joules_total
+                == e2.metrics.c.energy_joules_total)
+
+    def test_registry_agft_matches_direct_construction(self):
+        e1, t1 = self._trace_engine(), AGFTTuner(A6000)
+        e1.drain(policy=t1)
+        e2, t2 = self._trace_engine(), get_policy("agft")
+        e2.drain(policy=t2)
+        assert [h["freq"] for h in t1.history] \
+            == [h["freq"] for h in t2.history]
+
+    def test_monitor_windows_match_manual_diff(self):
+        from repro.energy.edp import diff_snapshots
+        eng = make_engine()
+        eng.submit(trace(30))
+        mon = TelemetryMonitor(0.5)
+        assert mon.observe(eng) is None        # first sample arms only
+        s0, t0 = eng.metrics.snapshot(), eng.clock
+        for _ in range(40):
+            eng.step()
+        w = mon.observe(eng)
+        ref = diff_snapshots(s0, eng.metrics.snapshot(),
+                             max(eng.clock - t0, 1e-9))
+        assert w == ref                        # WindowStats is frozen/eq
+
+
+# ---------------------------------------------------------------------------
+# Baseline policy behaviour
+# ---------------------------------------------------------------------------
+
+class TestBaselines:
+    def _energy(self, policy, n=120, rate=3.0, seed=5):
+        eng = make_engine()
+        eng.submit(trace(n, rate=rate, seed=seed))
+        eng.drain(policy=policy)
+        assert len(eng.finished) == n
+        return eng.metrics.c.energy_joules_total, eng
+
+    def test_static_below_fmax_saves_energy_when_slack_exists(self):
+        e_max, _ = self._energy(None)
+        e_static, eng = self._energy(StaticPolicy(A6000,
+                                                  frequency_mhz=1200.0))
+        assert eng.frequency == 1200.0
+        assert e_static < e_max
+
+    def test_oracle_picks_interior_frequency_and_saves(self):
+        e_max, _ = self._energy(None)
+        oracle = get_policy("oracle")
+        e_oracle, _ = self._energy(oracle)
+        assert A6000.f_min < oracle.frequency_mhz < A6000.f_max
+        assert e_oracle < e_max
+
+    def test_ondemand_downclocks_under_slack(self):
+        policy = OndemandPolicy(A6000)
+        eng = make_engine()
+        eng.submit(trace(60, rate=0.5, seed=9))   # sparse arrivals
+        eng.drain(policy=policy)
+        freqs = [h["freq"] for h in policy.history]
+        assert len(eng.finished) == 60
+        assert min(freqs) < A6000.f_max           # it did scale down
+
+    def test_slo_policy_walks_down_but_recovers(self):
+        policy = get_policy("slo")
+        eng = make_engine()
+        eng.submit(trace(200, seed=3))
+        eng.drain(policy=policy)
+        freqs = [h["freq"] for h in policy.history]
+        assert min(freqs) < A6000.f_max           # saved energy somewhere
+        assert policy.tpot_slo_s is not None      # calibrated its budget
+
+    def test_snap_to_grid(self):
+        assert snap_to_grid(1203.0, A6000) == 1200.0
+        assert snap_to_grid(1e9, A6000) == A6000.f_max
+        assert snap_to_grid(-5.0, A6000) == A6000.f_min
+
+    def test_observer_never_actuates(self):
+        policy = get_policy("observer")
+        _, eng = self._energy(policy, n=40)
+        assert eng.frequency == A6000.f_max
+        assert all(not h["acted"] for h in policy.history)
+        assert any(h["energy_j"] for h in policy.history)
+
+
+# ---------------------------------------------------------------------------
+# Cluster with per-node policy mixes
+# ---------------------------------------------------------------------------
+
+class TestClusterPolicies:
+    def test_heterogeneous_mix_drains(self):
+        cl = ServingCluster(CFG, n_nodes=3,
+                            policies=["agft", "slo", None])
+        cl.submit(trace(90, seed=13))
+        cl.drain()
+        assert cl.summary().finished == 90
+        names = [type(p).__name__ if p else None for p in cl.policies]
+        assert names == ["AGFTTuner", "SLOAwareLatencyPolicy", None]
+
+    def test_policy_instances_pass_through(self):
+        static = StaticPolicy(A6000, frequency_mhz=900.0)
+        cl = ServingCluster(CFG, n_nodes=2, policies=["ondemand", static])
+        cl.submit(trace(60, seed=14))
+        cl.drain()
+        assert cl.policies[1] is static
+        assert cl.summary().finished == 60
+        assert cl.engines[1].frequency == 900.0
+
+    def test_policy_count_mismatch_raises(self):
+        with pytest.raises(ValueError):
+            ServingCluster(CFG, n_nodes=2, policies=["agft"])
+
+    def test_legacy_tuners_alias(self):
+        cl = ServingCluster(CFG, n_nodes=2, with_tuners=True)
+        assert all(isinstance(t, AGFTTuner) for t in cl.tuners)
+
+
+# ---------------------------------------------------------------------------
+# TTFT accounting (satellite fix)
+# ---------------------------------------------------------------------------
+
+class TestTTFTAccounting:
+    def test_every_finished_request_counted_once(self):
+        eng = make_engine()
+        eng.submit(trace(80, rate=5.0, seed=17))
+        eng.drain()
+        c = eng.metrics.c
+        assert c.ttft_count_total == len(eng.finished) == 80
+        mean_ttft = np.mean([r.ttft for r in eng.finished])
+        assert c.ttft_seconds_total / c.ttft_count_total \
+            == pytest.approx(mean_ttft)
+
+    def test_counted_once_under_preemption(self):
+        eng = InferenceEngine(CFG, EngineConfig(num_kv_blocks=96,
+                                                max_num_seqs=32),
+                              initial_frequency=A6000.f_max)
+        eng.submit(trace(60, rate=50.0, seed=5,
+                         workload="high_concurrency"))
+        eng.drain()
+        assert eng.metrics.c.ttft_count_total == len(eng.finished) == 60

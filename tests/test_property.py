@@ -1,16 +1,24 @@
-"""Hypothesis property tests on system invariants."""
-import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+"""Hypothesis property tests on system invariants.
 
-from repro.core.linucb import LinUCBArm, LinUCBBank
-from repro.core.page_hinkley import PageHinkley
-from repro.energy import A6000, DVFSModel
-from repro.energy.edp import WindowStats
-from repro.core.features import FeatureExtractor
-from repro.serving.request import Request
-from repro.workloads import PROTOTYPES, generate_requests
-from repro.workloads.azure_trace import generate_azure_trace
+The whole module is skipped (not errored) when hypothesis is absent —
+install the pinned dev set from requirements-dev.txt to run it."""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings                       # noqa: E402
+from hypothesis import strategies as st                      # noqa: E402
+
+from repro.core.linucb import LinUCBArm, LinUCBBank          # noqa: E402
+from repro.core.page_hinkley import PageHinkley              # noqa: E402
+from repro.energy import A6000, DVFSModel                    # noqa: E402
+from repro.energy.edp import WindowStats                     # noqa: E402
+from repro.core.features import FeatureExtractor             # noqa: E402
+from repro.serving import PagedKVCache                       # noqa: E402
+from repro.serving.request import Request                    # noqa: E402
+from repro.workloads import PROTOTYPES, generate_requests    # noqa: E402
+from repro.workloads.azure_trace import generate_azure_trace  # noqa: E402
 
 floats01 = st.floats(0.0, 1.0, allow_nan=False)
 
@@ -52,6 +60,27 @@ class TestLinUCBProperties:
             assert f in bank.arms
             bank.arms[f].update(x, -1.0 + 0.1 * rng.normal())
         assert bank.select_greedy(rng.uniform(0, 1, 3)) in bank.arms
+
+
+class TestKVCacheProperties:
+    @given(st.lists(st.tuples(st.integers(1, 2000), st.integers(1, 400),
+                              st.integers(0, 20)), min_size=1, max_size=40))
+    @settings(max_examples=50, deadline=None)
+    def test_block_accounting_invariant(self, reqs):
+        kv = PagedKVCache(num_blocks=256, block_size=16)
+        live = []
+        for prompt, out, tmpl in reqs:
+            r = Request(arrival_time=0.0, prompt_len=prompt, output_len=out,
+                        template_id=tmpl)
+            if kv.try_allocate(r, prompt + out):
+                live.append(r)
+                kv.register_prefix(r)
+            assert kv.check_invariant()
+            assert 0 <= kv.free_blocks <= kv.num_blocks
+        for r in live:
+            kv.free(r)
+            assert kv.check_invariant()
+        assert kv.free_blocks + len(kv.prefix_blocks) == kv.num_blocks
 
 
 class TestDetectorProperties:

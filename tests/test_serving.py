@@ -1,10 +1,9 @@
-"""Serving-substrate tests: scheduler/KV-cache invariants (hypothesis
-property tests), engine accounting, energy model monotonicities, and the
-AGFT closed loop end-to-end on the simulated engine."""
+"""Serving-substrate tests: scheduler/KV-cache invariants, engine
+accounting, energy model monotonicities, and the AGFT closed loop
+end-to-end on the simulated engine. (The hypothesis-based KV property
+test lives in test_property.py so this module runs without hypothesis.)"""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
 from repro.configs import get_config
 from repro.core import AGFTConfig, AGFTTuner
@@ -23,25 +22,6 @@ CFG = get_config("llama3-3b")
 # ---------------------------------------------------------------------------
 
 class TestPagedKVCache:
-    @given(st.lists(st.tuples(st.integers(1, 2000), st.integers(1, 400),
-                              st.integers(0, 20)), min_size=1, max_size=40))
-    @settings(max_examples=50, deadline=None)
-    def test_block_accounting_invariant(self, reqs):
-        kv = PagedKVCache(num_blocks=256, block_size=16)
-        live = []
-        for prompt, out, tmpl in reqs:
-            r = Request(arrival_time=0.0, prompt_len=prompt, output_len=out,
-                        template_id=tmpl)
-            if kv.try_allocate(r, prompt + out):
-                live.append(r)
-                kv.register_prefix(r)
-            assert kv.check_invariant()
-            assert 0 <= kv.free_blocks <= kv.num_blocks
-        for r in live:
-            kv.free(r)
-            assert kv.check_invariant()
-        assert kv.free_blocks + len(kv.prefix_blocks) == kv.num_blocks
-
     def test_prefix_cache_hits_on_repeat_template(self):
         kv = PagedKVCache(num_blocks=512, block_size=16)
         r1 = Request(arrival_time=0, prompt_len=320, output_len=10,
@@ -242,7 +222,7 @@ class TestAGFTEndToEnd:
                               initial_frequency=A6000.f_max)
         eng.submit(generate_requests(PROTOTYPES[workload], n,
                                      base_rate=rate, seed=seed))
-        eng.drain(tuner=tuner)
+        eng.drain(policy=tuner)
         return eng
 
     def test_agft_saves_energy_and_improves_edp(self):
@@ -284,7 +264,7 @@ class TestAGFTEndToEnd:
                               initial_frequency=A6000.f_max)
         eng.submit(generate_azure_trace(600.0, base_rate=2.0, seed=8))
         tuner = AGFTTuner(A6000)
-        eng.drain(tuner=tuner)
+        eng.drain(policy=tuner)
         base = InferenceEngine(CFG, EngineConfig(),
                                initial_frequency=A6000.f_max)
         base.submit(generate_azure_trace(600.0, base_rate=2.0, seed=8))
