@@ -72,5 +72,19 @@ def run(duration: float = 3600.0, rate: float = 3.0, seed: int = 3,
     return out
 
 
+def main():
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="short run (900 sim-seconds) for CI smoke")
+    ap.add_argument("--duration", type=float, default=0.0,
+                    help="explicit trace duration in sim-seconds")
+    ap.add_argument("--rate", type=float, default=3.0)
+    ap.add_argument("--seed", type=int, default=3)
+    args = ap.parse_args()
+    duration = args.duration or (900.0 if args.quick else 3600.0)
+    run(duration=duration, rate=args.rate, seed=args.seed)
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -66,6 +66,15 @@ def _tab6(quick):
     return 0.0, f"max_abs_dev={out['max_abs_deviation_pct']:.1f}%"
 
 
+def _tab_fleet(quick):
+    from benchmarks.tab_fleet import run
+    out = run(n_requests=300 if quick else 600, quiet=True)
+    d = out["per_node_vs_global_pct"]
+    g = out["global_vs_base_pct"]
+    return 0.0, (f"global_energy{g['energy_j']:+.1f}%;"
+                 f"pernode_vs_global_edp{d['edp']:+.1f}%")
+
+
 def _roofline(quick):
     from benchmarks.roofline import run
     try:
@@ -86,6 +95,7 @@ BENCHMARKS = [
     ("tab2_3_phase_metrics", _tab23),
     ("tab4_5_ablations", _tab45),
     ("tab6_online_vs_offline", _tab6),
+    ("tab_fleet_global_vs_pernode", _tab_fleet),
     ("roofline_terms", _roofline),
 ]
 

@@ -13,9 +13,10 @@ from typing import Sequence
 
 import numpy as np
 
-from benchmarks.common import run_workload, save_json
+from benchmarks.common import (measured_oracle_frequency, run_workload,
+                               save_json)
 
-DEFAULT_POLICIES = ("agft", "static", "ondemand")
+DEFAULT_POLICIES = ("agft", "static", "ondemand", "oracle")
 
 
 def _phase(reqs, lo, hi):
@@ -37,9 +38,14 @@ def _window_energy(history, lo, hi):
 
 def _serve(policy_name, n_requests, rate, seed):
     """One policy on the shared trace via the common runner; returns
-    (engine, policy, totals-dict keyed like the phase tables)."""
+    (engine, policy, totals-dict keyed like the phase tables). The oracle
+    row is pinned at the TRACE-MEASURED sweep optimum (two-stage offline
+    procedure), not the analytic cost-model sweep."""
+    kw = ({"frequency_mhz": measured_oracle_frequency("normal", rate=rate,
+                                                      seed=seed)}
+          if policy_name == "oracle" else None)
     row = run_workload("normal", n_requests=n_requests, rate=rate,
-                       policy=policy_name, seed=seed)
+                       policy=policy_name, policy_kwargs=kw, seed=seed)
     totals = {"energy_j": row["energy_j"], "ttft": row["ttft_s"],
               "tpot": row["tpot_s"], "e2e": row["e2e_s"],
               "edp": row["edp"], "finished": row["finished"]}

@@ -1,6 +1,10 @@
 """Paper Tables 4/5: ablations — disable fine-grained frequency control
 ("No-grain") and disable intelligent pruning ("No pruning"); compare means
-and coefficients of variation (CV) of the window metrics."""
+and coefficients of variation (CV) of the window metrics. Extended with
+the switching-cost-aware variant (``agft-switchcost``, ROADMAP /
+arXiv:2410.11855): DVFS transitions are priced into the reward, so the row
+quantifies how much actuation churn the penalty removes and what it costs
+in EDP."""
 from __future__ import annotations
 
 import dataclasses
@@ -22,7 +26,8 @@ def _run(tcfg: AGFTConfig, n_requests: int, rate: float, seed: int,
                                  base_rate=rate, seed=seed))
     # any registered windowed policy works here; only agft takes a cfg
     tuner = get_policy(policy, hardware=A6000,
-                       **({"cfg": tcfg} if policy == "agft" else {}))
+                       **({"cfg": tcfg}
+                          if policy in ("agft", "agft-switchcost") else {}))
     eng.drain(policy=tuner)
     ws = [h for h in tuner.history
           if h["energy_j"] is not None and h["tpot"] is not None]
@@ -41,6 +46,7 @@ def _run(tcfg: AGFTConfig, n_requests: int, rate: float, seed: int,
     return {"energy": stats(energy), "edp": stats(edp),
             "tpot": stats(tpot), "ttft": stats(ttft), "e2e": stats(e2e),
             "pruned": len(pruner.permanently_pruned) if pruner else 0,
+            "switches": eng.metrics.c.freq_transitions_total,
             "n_windows": len(ws)}
 
 
@@ -51,6 +57,8 @@ def run(n_requests: int = 1500, rate: float = 3.0, seed: int = 2,
     nopruning = _run(
         AGFTConfig(pruning=PruningConfig(enabled=False)),
         n_requests, rate, seed)
+    switchcost = _run(AGFTConfig(), n_requests, rate, seed,
+                      policy="agft-switchcost")
 
     def diff(a, b, key, field):
         return 100 * (b[key][field] / a[key][field] - 1) \
@@ -58,6 +66,7 @@ def run(n_requests: int = 1500, rate: float = 3.0, seed: int = 2,
 
     out = {
         "full": full, "no_grain": nograin, "no_pruning": nopruning,
+        "switchcost": switchcost,
         "tab4_no_grain_vs_full": {
             k: {"mean_diff_pct": diff(full, nograin, k, "mean"),
                 "cv_diff_pct": diff(full, nograin, k, "cv")}
@@ -65,6 +74,14 @@ def run(n_requests: int = 1500, rate: float = 3.0, seed: int = 2,
         "tab5_no_pruning_vs_full": {
             k: {"cv_diff_pct": diff(full, nopruning, k, "cv")}
             for k in ("energy", "edp", "ttft", "tpot", "e2e")},
+        "tab_switchcost_vs_full": {
+            "switches_full": full["switches"],
+            "switches_switchcost": switchcost["switches"],
+            "switch_reduction_pct": 100 * (
+                1 - switchcost["switches"] / max(full["switches"], 1)),
+            **{k: {"mean_diff_pct": diff(full, switchcost, k, "mean")}
+               for k in ("energy", "edp", "ttft", "tpot", "e2e")},
+        },
         "paper": {
             "tab4": {"edp_mean": +9.24, "energy_cv": +151, "edp_cv": +34},
             "tab5": {"edp_cv": +33.1, "tpot_cv": +31.5},
@@ -78,6 +95,11 @@ def run(n_requests: int = 1500, rate: float = 3.0, seed: int = 2,
         print("no-pruning vs full: " + " ".join(
             f"{k}:cv{v['cv_diff_pct']:+.0f}%"
             for k, v in out["tab5_no_pruning_vs_full"].items()))
+        sc = out["tab_switchcost_vs_full"]
+        print(f"switchcost vs full: switches {sc['switches_full']} -> "
+              f"{sc['switches_switchcost']} "
+              f"({sc['switch_reduction_pct']:+.0f}% fewer), "
+              f"edp {sc['edp']['mean_diff_pct']:+.1f}%")
     return out
 
 

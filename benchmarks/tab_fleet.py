@@ -1,0 +1,93 @@
+"""Fleet-scope comparison (beyond paper; ROADMAP cross-node baseline):
+the same trace and router served by
+
+  ``fmax``       fixed default clocks (fleet baseline)
+  ``global``     ONE cluster-global controller — a single frequency for
+                 all nodes, learned from fleet-aggregated telemetry
+                 (``get_policy("global")``, inner AGFT)
+  ``per-node``   the paper's closed loop per node (heterogeneous optima)
+
+The gap between ``global`` and ``per-node`` is exactly what per-node
+closed loops buy over cross-node coordination — the quantity the ROADMAP
+asks for. A length-segregating router widens it (nodes see different
+phase mixes and want different frequencies); the default least-loaded
+router narrows it (homogeneous traffic -> one frequency is near-optimal).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from benchmarks.common import PAPER_MODEL, save_json
+from repro.configs import get_config
+from repro.serving.cluster import ServingCluster, route_by_length
+from repro.workloads import PROTOTYPES, generate_requests
+
+
+def _trace(n: int, seed: int):
+    """Mixed long-context + chat traffic (the split where per-node loops
+    can specialize)."""
+    return (generate_requests(PROTOTYPES["long_context"], n // 2,
+                              base_rate=1.5, seed=seed)
+            + generate_requests(PROTOTYPES["normal"], n - n // 2,
+                                base_rate=1.5, seed=seed + 1))
+
+
+def _serve(n_nodes, n_requests, seed, *, policies=None, fleet=None) -> Dict:
+    cfg = get_config(PAPER_MODEL)
+    cl = ServingCluster(cfg, n_nodes=n_nodes, with_tuners=False,
+                        policies=policies, fleet_policy=fleet,
+                        router=route_by_length)
+    cl.submit(_trace(n_requests, seed))
+    steps = cl.drain()
+    s = cl.summary()
+    return {
+        "finished": s.finished,
+        "energy_j": s.energy_j,
+        "ttft_s": s.mean_ttft_s,
+        "tpot_s": s.mean_tpot_s,
+        "edp": s.edp,
+        "node_frequencies": s.node_frequencies,
+        "freq_spread_mhz": (max(s.node_frequencies)
+                            - min(s.node_frequencies)),
+        "engine_steps": steps,
+    }
+
+
+def run(n_requests: int = 600, n_nodes: int = 4, seed: int = 11,
+        quiet: bool = False):
+    base = _serve(n_nodes, n_requests, seed)
+    glob = _serve(n_nodes, n_requests, seed, fleet="global")
+    pern = _serve(n_nodes, n_requests, seed,
+                  policies=["agft"] * n_nodes)
+
+    def vs_base(row):
+        return {k: 100 * (row[k] / base[k] - 1)
+                for k in ("energy_j", "edp", "ttft_s", "tpot_s")}
+
+    out = {
+        "fmax": base, "global": glob, "per_node": pern,
+        "global_vs_base_pct": vs_base(glob),
+        "per_node_vs_base_pct": vs_base(pern),
+        # what the per-node closed loops buy over one global setting
+        "per_node_vs_global_pct": {
+            k: 100 * (pern[k] / glob[k] - 1)
+            for k in ("energy_j", "edp", "ttft_s", "tpot_s")},
+    }
+    save_json("tab_fleet.json", out)
+    if not quiet:
+        for name in ("fmax", "global", "per_node"):
+            r = out[name]
+            fr = np.array(r["node_frequencies"])
+            print(f"{name:9s} energy {r['energy_j']/1e3:8.1f} kJ  "
+                  f"edp {r['edp']:8.1f}  tpot {r['tpot_s']*1e3:6.2f} ms  "
+                  f"f=[{fr.min():.0f}..{fr.max():.0f}] MHz")
+        d = out["per_node_vs_global_pct"]
+        print(f"per-node vs global: energy {d['energy_j']:+.1f}%  "
+              f"edp {d['edp']:+.1f}%")
+    return out
+
+
+if __name__ == "__main__":
+    run()

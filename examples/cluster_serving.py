@@ -2,7 +2,9 @@
 policies and a length-segregating router — nodes specialize and learn
 different frequencies for their traffic class. Also shows a heterogeneous
 per-node policy mix (AGFT on the long-context half, an SLO controller and
-the ondemand governor on the chat half) through the same shared driver.
+the ondemand governor on the chat half) and the fleet-global controller
+(one frequency for every node, learned from aggregated telemetry) through
+the same discrete-event driver.
 
   PYTHONPATH=src python examples/cluster_serving.py
 """
@@ -54,6 +56,19 @@ def main():
           f"({100*(1-m.energy_j/b.energy_j):+.1f}% vs baseline), "
           f"node policies = "
           f"{[type(p).__name__ for p in mixed.policies]}")
+
+    # cross-node coordination baseline: ONE controller, one frequency for
+    # the whole fleet, driven by summed telemetry — what per-node loops
+    # are measured against (benchmarks.tab_fleet does this exhaustively)
+    glob = ServingCluster(cfg, n_nodes=4, router=route_by_length,
+                          fleet_policy="global")
+    glob.submit(trace())
+    glob.drain()
+    g = glob.summary()
+    print(f"global fleet : {g.energy_j/1e3:9.1f} kJ "
+          f"({100*(1-g.energy_j/b.energy_j):+.1f}% vs baseline), "
+          f"single f* = {g.node_frequencies[0]:.0f} MHz "
+          f"({len(glob.fleet_policy.history)} fleet ticks)")
 
 
 if __name__ == "__main__":

@@ -1,6 +1,6 @@
 from repro.core.features import FEATURE_NAMES, FeatureExtractor, FeatureScales
 from repro.core.linucb import LinUCBArm, LinUCBBank
-from repro.core.monitor import TelemetryMonitor
+from repro.core.monitor import TelemetryMonitor, aggregate_snapshots
 from repro.core.page_hinkley import (ConvergenceConfig, ConvergenceDetector,
                                      PageHinkley)
 from repro.core.pruning import PruningConfig, PruningFramework
@@ -12,4 +12,5 @@ __all__ = ["FEATURE_NAMES", "FeatureExtractor", "FeatureScales", "LinUCBArm",
            "LinUCBBank", "ConvergenceConfig", "ConvergenceDetector",
            "PageHinkley", "PruningConfig", "PruningFramework",
            "MixedMaturityRefinement", "RefinementConfig", "RewardCalculator",
-           "RewardConfig", "AGFTConfig", "AGFTTuner", "TelemetryMonitor"]
+           "RewardConfig", "AGFTConfig", "AGFTTuner", "TelemetryMonitor",
+           "aggregate_snapshots"]

@@ -7,12 +7,42 @@ snapshots into per-window aggregates. That windowing used to live inside
 policy (AGFT, ondemand, SLO-aware, ...) observes the engine through the
 same ``WindowStats`` boundary — aggregate counters only, never per-request
 state (the privacy contract in ``serving.request``).
+
+The monitor is duck-typed over its source: anything exposing ``clock`` and
+``metrics.snapshot()`` works, which is how fleet-scope policies reuse it —
+:class:`repro.policies.fleet.FleetTelemetryView` aggregates every node's
+snapshot (via :func:`aggregate_snapshots`) behind the same interface, so a
+cluster-global controller observes the fleet exactly the way a per-node
+controller observes one engine.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Dict, Optional, Sequence
 
 from repro.energy.edp import WindowStats, diff_snapshots
+
+#: snapshot keys that are point-in-time *levels* shared across the fleet —
+#: aggregated by averaging. Everything else (monotonic counters, additive
+#: gauges like queue depths or power draw) sums across nodes.
+_MEAN_KEYS = frozenset({"vllm:gpu_cache_usage_perc",
+                        "vllm:current_frequency_mhz"})
+
+
+def aggregate_snapshots(snaps: Sequence[Dict[str, float]]
+                        ) -> Dict[str, float]:
+    """Fold per-engine metric snapshots into one fleet-level snapshot.
+
+    Counters and additive gauges (queue depths, watts) sum; fractional /
+    frequency levels average. The result is shaped exactly like a single
+    engine's ``snapshot()``, so ``diff_snapshots`` and every policy built
+    on :class:`TelemetryMonitor` consume it unchanged.
+    """
+    if not snaps:
+        return {}
+    n = len(snaps)
+    return {k: (sum(s[k] for s in snaps) / n if k in _MEAN_KEYS
+                else sum(s[k] for s in snaps))
+            for k in snaps[0]}
 
 
 class TelemetryMonitor:

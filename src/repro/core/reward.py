@@ -29,6 +29,12 @@ class RewardConfig:
     # noisier TTFT signal destabilizes the Azure longrun — measured)
     ttft_weight: float = 0.1
     queue_penalty: float = 0.05      # per unit of waiting/running pressure
+    # Switching-cost awareness (arXiv:2410.11855 switching-aware bandits):
+    # a DVFS transition is priced as `switch_cost_j` extra joules folded
+    # into the window's EDP whenever the credited action CHANGED the
+    # frequency. 0 (default) reproduces the paper's switching-oblivious
+    # reward exactly; the ``agft-switchcost`` registry variant enables it.
+    switch_cost_j: float = 0.0
 
 
 class RewardCalculator:
@@ -37,8 +43,14 @@ class RewardCalculator:
         self.ref_edp: Optional[float] = None
         self.windows_seen = 0
 
-    def __call__(self, w: WindowStats) -> float:
+    def __call__(self, w: WindowStats, switched: bool = False) -> float:
+        """Reward for the window; ``switched`` marks that the credited
+        action was a frequency *change* (a DVFS transition happened at the
+        window's start), billing ``switch_cost_j`` into its energy."""
         self.windows_seen += 1
+        if switched and self.cfg.switch_cost_j:
+            w = dataclasses.replace(
+                w, energy_j=w.energy_j + self.cfg.switch_cost_j)
         edp = max(w.edp_mixed(self.cfg.ttft_weight), 1e-12)
         if self.ref_edp is None:
             self.ref_edp = edp

@@ -51,6 +51,10 @@ class AGFTConfig:
 
 
 class AGFTTuner:
+    #: PowerPolicy scope: governs one engine (fleet-scope policies in
+    #: ``repro.policies.fleet`` declare ``scope = "fleet"``)
+    scope = "node"
+
     def __init__(self, hardware: HardwareSpec,
                  cfg: Optional[AGFTConfig] = None):
         self.hw = hardware
@@ -80,6 +84,8 @@ class AGFTTuner:
         self.monitor = TelemetryMonitor(self.cfg.sampling_period_s)
         self.prev_action: Optional[float] = None
         self.prev_context: Optional[np.ndarray] = None
+        self.prev_switched = False    # did actuating prev_action change f?
+        self.switch_count = 0         # actual DVFS transitions actuated
         self.history: List[dict] = []
 
     # ------------------------------------------------------------------
@@ -115,10 +121,11 @@ class AGFTTuner:
 
         x_t = self.features(window)
 
-        # 1. credit the previous action
+        # 1. credit the previous action (billing its DVFS transition, if
+        # the reward config prices switches)
         reward = None
         if self.prev_action is not None and self.prev_context is not None:
-            reward = self.reward_calc(window)
+            reward = self.reward_calc(window, switched=self.prev_switched)
             arm = self.bank.arms.get(self.prev_action)
             if arm is not None:
                 arm.update(self.prev_context, reward, edp=window.edp)
@@ -152,6 +159,9 @@ class AGFTTuner:
     def _actuate(self, engine, f: float, reward, window, phase,
                  x_t: Optional[np.ndarray] = None) -> None:
         engine.set_frequency(f)
+        self.prev_switched = (self.prev_action is not None
+                              and float(f) != self.prev_action)
+        self.switch_count += int(self.prev_switched)
         self.prev_action = float(f)
         self.prev_context = (x_t if x_t is not None
                              else np.zeros(self.features.dim))

@@ -53,6 +53,16 @@ class HardwareSpec:
     # 1365-1410 of 1800 MHz), never at f_max.
     perf_knee: float = 0.78
     perf_slope_above_knee: float = 0.25
+    # DVFS transition cost: switching the core clock is not free — the PLL
+    # relock plus pipeline drain stalls execution for O(10 ms) at near-busy
+    # power (switching-aware bandits, arXiv:2410.11855). When nonzero the
+    # engine bills `dvfs_transition_cost_j` joules and advances the clock by
+    # `dvfs_transition_s` on every *actual* frequency change. Both default
+    # to 0 so the faithful-reproduction calibrations are unchanged; the
+    # ``agft-switchcost`` policy variant prices transitions in the reward
+    # even when the simulation itself does not bill them.
+    dvfs_transition_cost_j: float = 0.0
+    dvfs_transition_s: float = 0.0
 
     def frequencies(self) -> List[float]:
         out, f = [], self.f_min

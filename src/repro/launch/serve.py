@@ -1,5 +1,5 @@
-"""Serving driver: run the continuous-batching engine under a workload with
-any registered power policy (or none).
+"""Serving driver: run the continuous-batching engine — or an N-node
+cluster — under a workload with any registered power policy (or none).
 
   python -m repro.launch.serve --arch llama3-3b --workload normal \
       --requests 2000 --policy agft
@@ -7,6 +7,8 @@ any registered power policy (or none).
       --duration 3600 --policy slo
   python -m repro.launch.serve --workload normal --policy none \
       --frequency 1200
+  python -m repro.launch.serve --nodes 4 --policy agft       # per-node loops
+  python -m repro.launch.serve --nodes 4 --fleet-policy global   # one global
 """
 from __future__ import annotations
 
@@ -19,6 +21,7 @@ from repro.configs import get_config
 from repro.energy import A6000, TPU_V5E
 from repro.policies import available_policies, get_policy
 from repro.serving import EngineConfig, InferenceEngine
+from repro.serving.cluster import ServingCluster
 from repro.workloads import (PROTOTYPES, generate_azure_trace,
                              generate_requests)
 
@@ -71,6 +74,54 @@ def summarize(engine: InferenceEngine, tuner=None) -> dict:
     return out
 
 
+def _generate(args):
+    if args.workload == "azure":
+        dur = args.duration or 3600.0
+        return generate_azure_trace(dur, base_rate=args.rate,
+                                    seed=args.seed)
+    return generate_requests(PROTOTYPES[args.workload], args.requests,
+                             base_rate=args.rate, seed=args.seed)
+
+
+def _serve_cluster(args) -> dict:
+    """N-node fleet: per-node copies of --policy, or one --fleet-policy
+    controller for the whole cluster."""
+    hw = HARDWARE[args.hardware]
+    policies = None
+    if args.fleet_policy == "none":
+        if args.policy != "none":
+            kw = ({"frequency_mhz": args.frequency}
+                  if args.policy in ("static", "oracle") and args.frequency
+                  else {})
+            policies = [get_policy(args.policy, hardware=hw, **kw)
+                        for _ in range(args.nodes)]
+        else:
+            policies = [None] * args.nodes
+    cl = ServingCluster(get_config(args.arch), n_nodes=args.nodes,
+                        hardware=hw, policies=policies,
+                        fleet_policy=(None if args.fleet_policy == "none"
+                                      else args.fleet_policy))
+    if args.policy == "none" and args.frequency:
+        for e in cl.engines:
+            e.set_frequency(args.frequency)
+    cl.submit(_generate(args))
+    steps = cl.drain()
+    s = cl.summary()
+    return {
+        "nodes": args.nodes,
+        "fleet_policy": args.fleet_policy,
+        "policy": args.policy if args.fleet_policy == "none" else None,
+        "finished": s.finished,
+        "energy_j": s.energy_j,
+        "ttft_s": s.mean_ttft_s,
+        "tpot_s": s.mean_tpot_s,
+        "edp": s.edp,
+        "node_frequencies": s.node_frequencies,
+        "node_energy_j": s.node_energy_j,
+        "engine_steps": steps,
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3-3b")
@@ -87,30 +138,36 @@ def main():
     ap.add_argument("--frequency", type=float, default=0.0,
                     help="fixed frequency for --policy none/static "
                          "(0 = f_max / the static default)")
+    ap.add_argument("--nodes", type=int, default=1,
+                    help="serve through an N-node ServingCluster")
+    ap.add_argument("--fleet-policy", default="none",
+                    help="fleet-scope controller (e.g. 'global'); implies "
+                         "cluster mode and overrides per-node --policy")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="")
     args = ap.parse_args()
 
-    eng = build_engine(args.arch, args.hardware)
-    if args.workload == "azure":
-        dur = args.duration or 3600.0
-        eng.submit(generate_azure_trace(dur, base_rate=args.rate,
-                                        seed=args.seed))
+    if args.policy == "global":
+        ap.error("'global' is fleet-scope: use --fleet-policy global "
+                 "--nodes N")
+    if args.fleet_policy != "none" and args.nodes < 2:
+        ap.error("--fleet-policy needs --nodes >= 2")
+    if args.nodes > 1:
+        summary = _serve_cluster(args)
     else:
-        eng.submit(generate_requests(PROTOTYPES[args.workload],
-                                     args.requests, base_rate=args.rate,
-                                     seed=args.seed))
-    tuner = None
-    if args.policy != "none":
-        kw = ({"frequency_mhz": args.frequency}
-              if args.policy in ("static", "oracle") and args.frequency
-              else {})
-        tuner = get_policy(args.policy, hardware=HARDWARE[args.hardware],
-                           **kw)
-    elif args.frequency:
-        eng.set_frequency(args.frequency)
-    eng.drain(policy=tuner)
-    summary = summarize(eng, tuner)
+        eng = build_engine(args.arch, args.hardware)
+        eng.submit(_generate(args))
+        tuner = None
+        if args.policy != "none":
+            kw = ({"frequency_mhz": args.frequency}
+                  if args.policy in ("static", "oracle") and args.frequency
+                  else {})
+            tuner = get_policy(args.policy,
+                               hardware=HARDWARE[args.hardware], **kw)
+        elif args.frequency:
+            eng.set_frequency(args.frequency)
+        eng.drain(policy=tuner)
+        summary = summarize(eng, tuner)
     print(json.dumps(summary, indent=1))
     if args.out:
         with open(args.out, "w") as f:

@@ -12,14 +12,23 @@ footing over the same trace.
 
 Built-in registry entries
 -------------------------
-``agft``      the paper's contextual-bandit tuner (LinUCB + pruning +
-              refinement + Page-Hinkley convergence)
-``static``    one fixed frequency for the whole run (locked clocks)
-``oracle``    best *fixed* frequency from an offline EDP sweep
-``ondemand``  utilization-threshold rule DVFS (Linux ondemand style)
-``slo``       TPOT-budget AIMD feedback controller (GreenLLM-style)
-``observer``  records telemetry windows, never actuates (exact baseline
-              time series for phase benchmarks)
+``agft``            the paper's contextual-bandit tuner (LinUCB + pruning
+                    + refinement + Page-Hinkley convergence)
+``agft-switchcost`` AGFT with DVFS transitions priced into the reward
+                    (switching-aware bandits, arXiv:2410.11855)
+``static``          one fixed frequency for the whole run (locked clocks)
+``oracle``          best *fixed* frequency from an offline EDP sweep
+``ondemand``        utilization-threshold rule DVFS (Linux ondemand style)
+``slo``             latency-budget AIMD feedback controller
+                    (GreenLLM-style); ``mode="ttft"`` budgets first-token
+                    latency instead of TPOT
+``slo-ttft``        shorthand for ``slo`` in TTFT-budget mode
+``observer``        records telemetry windows, never actuates (exact
+                    baseline time series for phase benchmarks)
+``global``          FLEET scope: one frequency for all nodes, an inner
+                    policy (default agft) driven by fleet-aggregated
+                    telemetry — attach via ``ServingCluster(...,
+                    fleet_policy="global")`` (see ``repro.policies.fleet``)
 
 Registering a new policy
 ------------------------
@@ -50,9 +59,13 @@ from repro.policies.registry import (available_policies, get_policy,
 from repro.policies.fixed import (OracleFixedPolicy, StaticPolicy,
                                   snap_to_grid)
 from repro.policies.rules import OndemandPolicy, SLOAwareLatencyPolicy
-from repro.policies.agft import make_agft
+from repro.policies.agft import make_agft, make_agft_switchcost
+from repro.policies.fleet import (FleetPolicy, FleetTelemetryView,
+                                  GlobalFrequencyPolicy)
 
 __all__ = ["PowerPolicy", "WindowedPolicy", "TelemetryRecorder",
            "available_policies", "get_policy", "register_policy",
            "StaticPolicy", "OracleFixedPolicy", "OndemandPolicy",
-           "SLOAwareLatencyPolicy", "make_agft", "snap_to_grid"]
+           "SLOAwareLatencyPolicy", "make_agft", "make_agft_switchcost",
+           "snap_to_grid", "FleetPolicy", "FleetTelemetryView",
+           "GlobalFrequencyPolicy"]

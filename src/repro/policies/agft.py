@@ -1,17 +1,26 @@
-"""Registry entry for the paper's tuner: AGFT *is* a PowerPolicy.
+"""Registry entries for the paper's tuner: AGFT *is* a PowerPolicy.
 
 ``AGFTTuner`` already conforms structurally (``maybe_act(engine) ->
 Optional[float]``, telemetry via the shared ``TelemetryMonitor``); this
 module only adapts its constructor signature to the registry's
-``(hardware, **kwargs)`` convention.
+``(hardware, **kwargs)`` convention, plus the switching-cost-aware
+ablation variant.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional
 
 from repro.core.tuner import AGFTConfig, AGFTTuner
 from repro.energy.power_model import HardwareSpec
 from repro.policies.registry import register_policy
+
+#: default DVFS transition price for ``agft-switchcost`` when the hardware
+#: spec doesn't declare one: ~an A6000-class board stalling O(10 ms) at
+#: near-busy power per PLL relock, plus the pipeline-refill glitch —
+#: conservative but the right order (switching-aware bandits,
+#: arXiv:2410.11855, price exactly this regularizer).
+DEFAULT_SWITCH_COST_J = 15.0
 
 
 @register_policy("agft")
@@ -23,3 +32,24 @@ def make_agft(hardware: HardwareSpec, cfg: Optional[AGFTConfig] = None,
     if cfg is not None and kwargs:
         raise TypeError("pass either cfg= or AGFTConfig field kwargs")
     return AGFTTuner(hardware, cfg or AGFTConfig(**kwargs))
+
+
+@register_policy("agft-switchcost")
+def make_agft_switchcost(hardware: HardwareSpec,
+                         switch_cost_j: Optional[float] = None,
+                         cfg: Optional[AGFTConfig] = None,
+                         **kwargs) -> AGFTTuner:
+    """AGFT with a switching-cost-aware reward: frequency *changes* are
+    billed ``switch_cost_j`` joules into the credited window's EDP, so the
+    bandit learns to hold its operating point unless moving pays for the
+    transition. The cost defaults to the hardware spec's
+    ``dvfs_transition_cost_j`` when it prices transitions, else
+    ``DEFAULT_SWITCH_COST_J``."""
+    if cfg is not None and kwargs:
+        raise TypeError("pass either cfg= or AGFTConfig field kwargs")
+    cost = (switch_cost_j if switch_cost_j is not None
+            else (hardware.dvfs_transition_cost_j or DEFAULT_SWITCH_COST_J))
+    cfg = cfg or AGFTConfig(**kwargs)
+    cfg = dataclasses.replace(
+        cfg, reward=dataclasses.replace(cfg.reward, switch_cost_j=cost))
+    return AGFTTuner(hardware, cfg)

@@ -3,9 +3,15 @@
 A power policy is anything with ``maybe_act(engine) -> Optional[float]``:
 called after every engine step, it may read the engine's aggregate metrics
 and actuate ``engine.set_frequency``; it returns the chosen frequency when
-it acts and ``None`` otherwise. The shared drive loop
+it acts and ``None`` otherwise. The shared event loop
 (``repro.serving.driver``) calls nothing else, so AGFT, rule-based
 governors and SLO controllers are interchangeable behind this boundary.
+
+Policies carry a ``scope`` class attribute: ``"node"`` (this module's
+default — one controller per engine, invoked on iteration-complete
+events) or ``"fleet"`` (one controller for a whole cluster, invoked on
+FLEET_TICK events with aggregated telemetry; see
+``repro.policies.fleet``).
 """
 from __future__ import annotations
 
@@ -42,6 +48,8 @@ class WindowedPolicy:
 
     #: label recorded in history rows; subclasses override
     phase_name = "rule"
+    #: governs a single engine (fleet-scope policies declare "fleet")
+    scope = "node"
 
     def __init__(self, hardware: HardwareSpec,
                  sampling_period_s: float = 0.8):

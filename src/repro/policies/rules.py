@@ -50,15 +50,22 @@ class OndemandPolicy(WindowedPolicy):
 
 @register_policy("slo")
 class SLOAwareLatencyPolicy(WindowedPolicy):
-    """TPOT-budget feedback controller (GreenLLM-style).
+    """Latency-budget feedback controller (GreenLLM-style), in one of two
+    budget modes:
 
-    Tracks the window's effective TPOT against a budget and walks the
-    frequency down while latency has headroom, recovering multiplicatively
-    on violation (latency safety beats energy). The budget is either given
-    explicitly (``tpot_slo_s``) or self-calibrated as ``(1 +
-    overhead_budget)`` x the first productive window's TPOT at the initial
-    (default f_max) frequency — i.e. "spend at most the paper's <10%
-    latency overhead".
+    ``mode="tpot"`` (default) tracks the window's effective TPOT;
+    ``mode="ttft"`` tracks the window's mean first-token latency, measured
+    from the scheduler's exact first-token counters (no float-equality
+    replay) — the budget that matters for interactive front-ends whose
+    SLO is on responsiveness rather than streaming rate.
+
+    Either way the controller walks the frequency down while the budgeted
+    latency has headroom and recovers multiplicatively on violation
+    (latency safety beats energy). The budget is either given explicitly
+    (``tpot_slo_s`` / ``ttft_slo_s``) or self-calibrated as ``(1 +
+    overhead_budget)`` x the first productive window's value at the
+    initial (default f_max) frequency — i.e. "spend at most the paper's
+    <10% latency overhead".
     """
 
     phase_name = "slo"
@@ -69,28 +76,71 @@ class SLOAwareLatencyPolicy(WindowedPolicy):
                  headroom: float = 0.9,
                  down_step_mhz: Optional[float] = None,
                  boost: float = 1.25,
-                 sampling_period_s: float = 0.8):
+                 sampling_period_s: float = 0.8,
+                 mode: str = "tpot",
+                 ttft_slo_s: Optional[float] = None):
+        if mode not in ("tpot", "ttft"):
+            raise ValueError(f"mode must be 'tpot' or 'ttft', got {mode!r}")
         super().__init__(hardware, sampling_period_s)
+        self.mode = mode
         self.tpot_slo_s = tpot_slo_s
+        self.ttft_slo_s = ttft_slo_s
         self.overhead_budget = overhead_budget
         self.headroom = headroom
         self.down_step_mhz = down_step_mhz or 2 * hardware.f_step
         self.boost = boost
 
-    def decide(self, window, engine) -> Optional[float]:
-        if window is None or window.generation_tokens <= 0:
+    # ------------------------------------------------------------------
+    def _budgeted_latency(self, window) -> Optional[float]:
+        """The window's value of the budgeted metric, or None if the
+        window produced no samples of it."""
+        if self.mode == "ttft":
+            # mean_ttft_s is 0 when no request produced its first token
+            # in this window — no signal, no decision
+            return window.mean_ttft_s if window.mean_ttft_s > 0 else None
+        if window.generation_tokens <= 0:
             return None
-        tpot = window.effective_tpot
-        if self.tpot_slo_s is None:
+        return window.effective_tpot
+
+    def _budget(self) -> Optional[float]:
+        return self.ttft_slo_s if self.mode == "ttft" else self.tpot_slo_s
+
+    def _calibrate(self, value: float) -> None:
+        budget = value * (1.0 + self.overhead_budget)
+        if self.mode == "ttft":
+            self.ttft_slo_s = budget
+        else:
+            self.tpot_slo_s = budget
+
+    def decide(self, window, engine) -> Optional[float]:
+        if window is None:
+            return None
+        lat = self._budgeted_latency(window)
+        if lat is None:
+            return None
+        budget = self._budget()
+        if budget is None:
             # calibrate the budget off the reference window and hold
-            self.tpot_slo_s = tpot * (1.0 + self.overhead_budget)
+            self._calibrate(lat)
             return None
         f = engine.frequency
-        if tpot > self.tpot_slo_s:
+        if lat > budget:
             # violation: multiplicative recovery (at least two grid steps)
             return snap_to_grid(max(f * self.boost,
                                     f + 2 * self.hw.f_step), self.hw)
-        if tpot < self.headroom * self.tpot_slo_s:
+        if lat < self.headroom * budget:
             # headroom: additive decrease toward the energy-optimal floor
             return snap_to_grid(f - self.down_step_mhz, self.hw)
         return None
+
+
+@register_policy("slo-ttft")
+def make_slo_ttft(hardware: HardwareSpec, **kwargs
+                  ) -> SLOAwareLatencyPolicy:
+    """TTFT-budget convenience entry: ``get_policy("slo-ttft")`` ==
+    ``get_policy("slo", mode="ttft")``. A redundant ``mode="ttft"`` kwarg
+    is tolerated; any other mode is rejected."""
+    mode = kwargs.pop("mode", "ttft")
+    if mode != "ttft":
+        raise ValueError(f"slo-ttft is fixed to mode='ttft', got {mode!r}")
+    return SLOAwareLatencyPolicy(hardware, mode="ttft", **kwargs)

@@ -1,4 +1,4 @@
-from repro.serving.driver import EngineNode, drive
+from repro.serving.driver import EngineNode, EventKind, EventLoop, drive
 from repro.serving.engine import (EngineConfig, InferenceEngine, JaxBackend,
                                   SimBackend)
 from repro.serving.kv_cache import PagedKVCache
@@ -6,7 +6,7 @@ from repro.serving.metrics import MetricsExporter
 from repro.serving.request import Request, RequestState
 from repro.serving.scheduler import BatchPlan, ContinuousBatchingScheduler
 
-__all__ = ["EngineConfig", "EngineNode", "InferenceEngine", "JaxBackend",
-           "SimBackend", "PagedKVCache", "MetricsExporter", "Request",
-           "RequestState", "BatchPlan", "ContinuousBatchingScheduler",
-           "drive"]
+__all__ = ["EngineConfig", "EngineNode", "EventKind", "EventLoop",
+           "InferenceEngine", "JaxBackend", "SimBackend", "PagedKVCache",
+           "MetricsExporter", "Request", "RequestState", "BatchPlan",
+           "ContinuousBatchingScheduler", "drive"]

@@ -2,7 +2,7 @@
 inference clusters"): N engine replicas, each governed by its OWN power
 policy (per-node closed loops, no cross-node coordination needed — the
 paper's privacy/minimal-intrusion story holds per node), plus a
-load-aware router.
+load-aware router and an optional FLEET-scope controller.
 
 Policies are per-node and heterogeneous: ``policies=["agft", "slo",
 None]`` gives node 0 the paper tuner, node 1 a GreenLLM-style SLO
@@ -12,6 +12,12 @@ own fingerprint stream, heterogeneous traffic splits (e.g. a router that
 segregates long-context from chat traffic) let different nodes converge
 to DIFFERENT frequencies — fleet energy beyond what one global setting
 achieves.
+
+``fleet_policy=`` attaches the cross-node coordination baseline instead:
+one controller (e.g. ``"global"``) sampling fleet-aggregated telemetry on
+FLEET_TICK events and setting a single frequency for every node — the
+comparison that quantifies what the per-node closed loops buy
+(``benchmarks.tab_fleet``).
 """
 from __future__ import annotations
 
@@ -34,7 +40,7 @@ PolicySpec = Union[str, None, object]   # registry name | None | instance
 def route_least_loaded(engines: List[InferenceEngine],
                        req: Request) -> int:
     """Default router: fewest running+waiting requests."""
-    loads = [e.sched.num_running() + e.sched.num_waiting() + len(e.pending)
+    loads = [e.sched.num_running() + e.sched.num_waiting() + e.num_pending
              for e in engines]
     return int(np.argmin(loads))
 
@@ -72,18 +78,33 @@ class ServingCluster:
                  tuner_cfg: Optional[AGFTConfig] = None,
                  with_tuners: bool = True,
                  policies: Optional[Sequence[PolicySpec]] = None,
-                 router: Callable = route_least_loaded):
+                 router: Callable = route_least_loaded,
+                 fleet_policy: PolicySpec = None):
         """``policies`` takes one entry per node — a registry name, a
         ready policy instance, or None (fixed clocks). When omitted,
         ``with_tuners`` keeps the legacy behaviour: an AGFT tuner per node
-        (``tuner_cfg`` applies) or no policy at all."""
+        (``tuner_cfg`` applies) or no policy at all. ``fleet_policy``
+        attaches a FLEET-scope controller instead (registry name like
+        ``"global"`` or instance); per-node policies then default to None
+        so exactly one authority actuates each node (pass both explicitly
+        for hierarchical experiments)."""
         engines = [InferenceEngine(model_cfg,
                                    engine_cfg or EngineConfig(),
                                    hardware=hardware,
                                    initial_frequency=hardware.f_max)
                    for _ in range(n_nodes)]
+        if isinstance(fleet_policy, str):
+            fleet_policy = get_policy(fleet_policy, hardware=hardware)
+        if (fleet_policy is not None
+                and getattr(fleet_policy, "scope", "node") != "fleet"):
+            raise ValueError(
+                f"fleet_policy must have scope 'fleet', got "
+                f"{type(fleet_policy).__name__} (scope "
+                f"{getattr(fleet_policy, 'scope', 'node')!r})")
+        self.fleet_policy = fleet_policy
         if policies is None:
-            policies = (["agft"] * n_nodes if with_tuners
+            policies = (["agft"] * n_nodes
+                        if with_tuners and fleet_policy is None
                         else [None] * n_nodes)
         if len(policies) != n_nodes:
             raise ValueError(f"got {len(policies)} policies for "
@@ -94,6 +115,10 @@ class ServingCluster:
                 kw = ({"cfg": tuner_cfg}
                       if spec == "agft" and tuner_cfg is not None else {})
                 spec = get_policy(spec, hardware=hardware, **kw)
+            if spec is not None and getattr(spec, "scope", "node") == "fleet":
+                raise ValueError(
+                    f"{type(spec).__name__} is fleet-scope; attach it via "
+                    f"fleet_policy=, not per-node policies")
             resolved.append(spec)
         self.nodes = [EngineNode(e, p) for e, p in zip(engines, resolved)]
         self.router = router
@@ -123,10 +148,13 @@ class ServingCluster:
         return any(n.engine.has_work for n in self.nodes)
 
     def drain(self, max_iters: int = 10_000_000) -> int:
-        """Advance all nodes through the shared drive loop (laggard-first;
-        nodes are independent, so stepping the slowest clock preserves
-        causality)."""
-        return drive(self.nodes, max_iters=max_iters)
+        """Advance all nodes through the shared event loop (events fire in
+        virtual-time order; nodes are independent, so per-node
+        trajectories don't depend on interleaving). A fleet policy, if
+        attached, ticks on its own cadence against the loop's global
+        timeline."""
+        return drive(self.nodes, max_iters=max_iters,
+                     fleet_policy=self.fleet_policy)
 
     # ------------------------------------------------------------------
     def summary(self) -> ClusterSummary:

@@ -1,52 +1,148 @@
-"""The shared drive loop: one event-driven driver for every serving shape.
+"""The discrete-event serving core: one event loop for every serving shape.
 
 ``InferenceEngine.run_until/drain`` and ``ServingCluster.drain`` used to
 carry three copies of the same "step, then let the frequency authority
-act" loop — with the cluster variant paying an O(n) ``engines.index``
-lookup per step to find its tuner. This module unifies them: engines are
-paired with their (optional) policy in an :class:`EngineNode`, and
-:func:`drive` advances the laggard node (min simulated clock, via a heap —
-O(log n) per step) until no work remains, invoking each node's attached
-policy after its step. Nodes are independent simulations, so stepping the
-laggard preserves causality; heterogeneous per-node policies are free.
+act" loop, later unified into a heap of engine *clocks*. This module grows
+that into a proper discrete-event simulation: the heap holds typed, timed
+events —
+
+``ARRIVAL``          an idle engine's next request lands; the engine
+                     idle-advances (billing idle energy) and iterates
+``ITERATION``        an engine with schedulable work runs one
+                     continuous-batching iteration, then its per-node
+                     policy gets the iteration-complete callback
+``FLEET_TICK``       a fleet-scope policy (:class:`repro.policies.fleet.
+                     FleetPolicy`) samples aggregated telemetry on its own
+                     cadence — the policy-tick event per-node controllers
+                     don't need (their monitors gate on the engine clock
+                     at iteration boundaries, which keeps decision
+                     sequences bit-identical to the pre-event-loop driver)
+
+Each node event is keyed by the engine's ``next_event_time()`` — the next
+instant it actually does anything — so idle nodes cost nothing until their
+next arrival, and the loop's virtual ``now`` (min over scheduled events)
+is a coherent global timeline for fleet controllers. Nodes are independent
+simulations, so per-node trajectories are identical to the old
+laggard-clock loop; only the interleaving (and hence where fleet ticks can
+see the fleet) changes. O(log n) per event; heterogeneous per-node
+policies and a cluster-global controller are both free.
 """
 from __future__ import annotations
 
 import dataclasses
+import enum
 import heapq
-from typing import Optional, Sequence
+import itertools
+from typing import Dict, List, Optional, Sequence
+
+
+class EventKind(enum.IntEnum):
+    """What a scheduled event will do when it fires."""
+    ARRIVAL = 0        # idle engine: next request lands, then it iterates
+    ITERATION = 1      # engine with schedulable work runs one iteration
+    FLEET_TICK = 2     # fleet-scope policy samples aggregated telemetry
 
 
 @dataclasses.dataclass
 class EngineNode:
     """An engine paired with the power policy that governs it (or None)."""
     engine: object                      # InferenceEngine
-    policy: Optional[object] = None     # PowerPolicy
+    policy: Optional[object] = None     # PowerPolicy (node scope)
+
+
+class EventLoop:
+    """Event-scheduled driver over a set of :class:`EngineNode`.
+
+    Exactly one event is outstanding per live node; firing it advances the
+    engine one step (``engine.step()`` — idle-advance and/or iteration),
+    invokes the node's policy, and reschedules at the engine's next event
+    time. ``fleet_policy`` (optional) receives ``act(engines, now)`` ticks
+    every ``fleet_policy.sampling_period_s`` sim-seconds while any node is
+    live. A node leaves the loop when it drains or its clock reaches
+    ``t_end``; ``run`` returns the number of engine steps executed.
+    """
+
+    def __init__(self, nodes: Sequence[EngineNode], *,
+                 fleet_policy: Optional[object] = None,
+                 t_end: Optional[float] = None,
+                 max_iters: int = 10_000_000):
+        self.nodes = list(nodes)
+        self.fleet_policy = fleet_policy
+        self.t_end = t_end
+        self.max_iters = max_iters
+        self.now = 0.0                       # virtual time, never decreases
+        self.steps = 0
+        self.counts: Dict[EventKind, int] = {k: 0 for k in EventKind}
+        self._seq = itertools.count()        # FIFO tie-break at equal times
+        self._heap: List[tuple] = []
+        self._live = 0
+        for i in range(len(self.nodes)):
+            if self._schedule_node(i):
+                self._live += 1
+        if fleet_policy is not None and self._live:
+            period = getattr(fleet_policy, "sampling_period_s", 0.8)
+            start = min(t for t, _, _, _ in self._heap)
+            self._push(start + period, EventKind.FLEET_TICK, -1)
+
+    # ------------------------------------------------------------------
+    @property
+    def engines(self) -> List[object]:
+        return [n.engine for n in self.nodes]
+
+    def _push(self, t: float, kind: EventKind, node: int) -> None:
+        heapq.heappush(self._heap, (t, next(self._seq), kind, node))
+
+    def _schedule_node(self, i: int) -> bool:
+        """Schedule node ``i``'s next event; False if it has drained."""
+        eng = self.nodes[i].engine
+        t = eng.next_event_time()
+        if t is None:
+            return False
+        kind = (EventKind.ITERATION if eng.sched.has_work
+                else EventKind.ARRIVAL)
+        self._push(t, kind, i)
+        return True
+
+    # ------------------------------------------------------------------
+    def run(self) -> int:
+        t_end = self.t_end
+        while self._heap and self.steps < self.max_iters:
+            t, _, kind, i = heapq.heappop(self._heap)
+            if t > self.now:
+                self.now = t
+
+            if kind is EventKind.FLEET_TICK:
+                if self._live == 0:
+                    continue                       # fleet dies with nodes
+                self.fleet_policy.act(self.engines, t)
+                self.counts[kind] += 1
+                nxt = t + getattr(self.fleet_policy, "sampling_period_s",
+                                  0.8)
+                if t_end is None or nxt < t_end:
+                    self._push(nxt, EventKind.FLEET_TICK, -1)
+                continue
+
+            node = self.nodes[i]
+            eng = node.engine
+            if not eng.has_work or (t_end is not None
+                                    and eng.clock >= t_end):
+                self._live -= 1
+                continue
+            eng.step()
+            if node.policy is not None:
+                node.policy.maybe_act(eng)
+            self.steps += 1
+            self.counts[kind] += 1
+            if not self._schedule_node(i):
+                self._live -= 1
+        return self.steps
 
 
 def drive(nodes: Sequence[EngineNode], *, t_end: Optional[float] = None,
-          max_iters: int = 10_000_000) -> int:
-    """Advance ``nodes`` in lock-step on the slowest clock.
-
-    Each pop steps the laggard engine once and gives its policy a chance
-    to act (``policy.maybe_act(engine)``). A node leaves the loop when it
-    runs out of work or its clock reaches ``t_end``. Returns the number of
-    engine steps executed.
-    """
-    heap = []
-    for i, node in enumerate(nodes):
-        if node.engine.has_work:
-            heapq.heappush(heap, (node.engine.clock, i))
-    it = 0
-    while heap and it < max_iters:
-        _, i = heapq.heappop(heap)
-        node = nodes[i]
-        eng = node.engine
-        if not eng.has_work or (t_end is not None and eng.clock >= t_end):
-            continue
-        eng.step()
-        if node.policy is not None:
-            node.policy.maybe_act(eng)
-        it += 1
-        heapq.heappush(heap, (eng.clock, i))
-    return it
+          max_iters: int = 10_000_000,
+          fleet_policy: Optional[object] = None) -> int:
+    """Advance ``nodes`` through the shared event loop until no work
+    remains (or ``t_end``/``max_iters``); returns engine steps executed.
+    Thin facade over :class:`EventLoop` for the common one-shot case."""
+    return EventLoop(nodes, fleet_policy=fleet_policy, t_end=t_end,
+                     max_iters=max_iters).run()

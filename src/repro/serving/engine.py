@@ -6,10 +6,20 @@ paper's evaluation environment); ``JaxBackend`` executes real JAX forwards
 of a (reduced) model so the whole serving stack can be integration-tested
 end-to-end on CPU. Both expose identical (latency, energy, power) effects,
 so AGFT drives either transparently through ``set_frequency``.
+
+The engine is a discrete-event process: future arrivals live in a heap
+(O(log n) ``submit``, no re-sorts), and ``next_event_time`` tells the
+event-scheduled driver (``repro.serving.driver``) when this engine next
+does anything — now, if the scheduler holds work; at the next arrival, if
+it is idle. ``step`` = (idle-advance to that arrival, billing idle energy)
++ ``run_iteration``; both halves are public so event loops can drive them
+separately.
 """
 from __future__ import annotations
 
 import dataclasses
+import heapq
+import itertools
 from typing import List, Optional, Tuple
 
 import numpy as np
@@ -152,52 +162,107 @@ class InferenceEngine:
         self.metrics = MetricsExporter()
         self.clock = 0.0
         self.frequency = initial_frequency or hardware.f_max
-        self.pending: List[Request] = []      # future arrivals, sorted
+        # future arrivals: (arrival_time, submit order, request) heap —
+        # O(log n) per submit, FIFO among equal arrival times
+        self._pending: List[Tuple[float, int, Request]] = []
+        self._submit_seq = itertools.count()
         self.finished: List[Request] = []
 
     # ------------------------------------------------------------------
     def submit(self, requests: List[Request]) -> None:
-        self.pending.extend(requests)
-        self.pending.sort(key=lambda r: r.arrival_time)
+        for r in requests:
+            heapq.heappush(self._pending,
+                           (r.arrival_time, next(self._submit_seq), r))
 
     def set_frequency(self, f_mhz: float) -> None:
         sp = self.hardware
-        self.frequency = min(max(f_mhz, sp.f_min), sp.f_max)
+        f = min(max(f_mhz, sp.f_min), sp.f_max)
+        if f != self.frequency:
+            c = self.metrics.c
+            c.freq_transitions_total += 1
+            # DVFS transitions are billed when the hardware prices them
+            # (both default to 0 in the shipped calibrations)
+            if sp.dvfs_transition_cost_j > 0.0:
+                c.energy_joules_total += sp.dvfs_transition_cost_j
+            if sp.dvfs_transition_s > 0.0:
+                self.clock += sp.dvfs_transition_s
+        self.frequency = f
 
     # ------------------------------------------------------------------
+    @property
+    def pending(self) -> List[Request]:
+        """Future arrivals in heap (not time) order — introspection only;
+        hot paths use the heap directly."""
+        return [r for _, _, r in self._pending]
+
+    @property
+    def num_pending(self) -> int:
+        return len(self._pending)
+
+    @property
+    def next_arrival_time(self) -> Optional[float]:
+        return self._pending[0][0] if self._pending else None
+
     def _ingest_arrivals(self) -> None:
-        while self.pending and self.pending[0].arrival_time <= self.clock:
-            self.sched.add_request(self.pending.pop(0))
+        while self._pending and self._pending[0][0] <= self.clock:
+            self.sched.add_request(heapq.heappop(self._pending)[2])
 
     @property
     def has_work(self) -> bool:
-        return bool(self.pending) or self.sched.has_work
+        return bool(self._pending) or self.sched.has_work
+
+    def next_event_time(self) -> Optional[float]:
+        """When this engine next does anything: now if the scheduler holds
+        work, the next arrival if idle, ``None`` if fully drained."""
+        if self.sched.has_work:
+            return self.clock
+        if self._pending:
+            return self._pending[0][0]
+        return None
+
+    def advance_to(self, t: float) -> None:
+        """Idle-advance the clock to ``t``, billing idle energy for the
+        gap, then ingest every arrival now due."""
+        dt = max(t - self.clock, 0.0)
+        dvfs = getattr(self.backend, "dvfs", None)
+        idle_e = dvfs.idle_energy(dt) if dvfs else 0.0
+        self.clock = max(self.clock, t)
+        self.metrics.c.energy_joules_total += idle_e
+        self._ingest_arrivals()
 
     def step(self) -> List[Request]:
-        """One engine iteration; returns requests finished in it."""
+        """One engine iteration; returns requests finished in it. If the
+        scheduler is idle, first skips to the next arrival (billing idle
+        power for the gap)."""
         self._ingest_arrivals()
         if not self.sched.has_work:
-            if not self.pending:
+            if not self._pending:
                 return []
-            # idle-skip to next arrival, billing idle power
-            nxt = self.pending[0].arrival_time
-            dt = max(nxt - self.clock, 0.0)
-            dvfs = getattr(self.backend, "dvfs", None)
-            idle_e = dvfs.idle_energy(dt) if dvfs else 0.0
-            self.clock = nxt
-            self.metrics.c.energy_joules_total += idle_e
-            self._ingest_arrivals()
+            self.advance_to(self._pending[0][0])
+        return self.run_iteration()
 
+    def _blocked_tick(self) -> List[Request]:
+        """Blocked (e.g. out of KV blocks with nothing preemptible): burn a
+        millisecond at idle power — time is never free."""
+        dt = 1e-3
+        dvfs = getattr(self.backend, "dvfs", None)
+        if dvfs is not None:
+            self.metrics.c.energy_joules_total += dvfs.idle_energy(dt)
+        self.clock += dt
+        return []
+
+    def run_iteration(self) -> List[Request]:
+        """Execute one continuous-batching iteration at the current clock
+        (the scheduler is expected to hold work; otherwise this is a
+        blocked tick)."""
         plan = self.sched.schedule(self.clock)
         if plan.empty:
             # blocked (e.g. out of KV blocks): try preemption, else idle-tick
             if not self.sched._preempt_lowest_priority():
-                self.clock += 1e-3
-                return []
+                return self._blocked_tick()
             plan = self.sched.schedule(self.clock)
             if plan.empty:
-                self.clock += 1e-3
-                return []
+                return self._blocked_tick()
 
         dt, energy, power = self.backend.execute(plan, self.frequency)
         self.clock += dt
@@ -225,7 +290,7 @@ class InferenceEngine:
         c.energy_joules_total += energy
         c.busy_seconds_total += dt
         c.requests_running = self.sched.num_running()
-        c.requests_waiting = self.sched.num_waiting() + len(self.pending)
+        c.requests_waiting = self.sched.num_waiting() + len(self._pending)
         c.gpu_cache_usage = self.kv.usage
         c.current_frequency_mhz = self.frequency
         c.current_power_watts = power

@@ -45,6 +45,10 @@ class PagedKVCache:
         self.seq_borrowed: Dict[int, List[Tuple[int, int]]] = {}
         self.prefix_blocks: Dict[Tuple[int, int], int] = {}  # key -> refcount
         self.prefix_lru: collections.OrderedDict = collections.OrderedDict()
+        # cached blocks with refcount 0 — lets the LRU eviction sweep
+        # short-circuit when the whole cache is borrowed (the steady state
+        # of a saturated long run, where scanning would find nothing)
+        self._evictable = 0
         self.stats = CacheStats()
 
     # ------------------------------------------------------------------
@@ -85,16 +89,24 @@ class PagedKVCache:
 
     def _evict_prefix(self, n: int) -> int:
         """Evict up to n unreferenced cached blocks (LRU order)."""
-        evicted = 0
-        for key in list(self.prefix_lru):
-            if evicted >= n:
-                break
-            if self.prefix_blocks.get(key, 0) == 0:
-                del self.prefix_blocks[key]
-                del self.prefix_lru[key]
-                self.free_blocks += 1
-                evicted += 1
-        return evicted
+        want = min(n, self._evictable)
+        if want <= 0:
+            return 0
+        # collect victims with an early-exit scan (no full-LRU snapshot:
+        # the head of the order is where unreferenced blocks live, so this
+        # stops after O(victims) entries in the common case)
+        victims: List[Tuple[int, int]] = []
+        for key in self.prefix_lru:
+            if self.prefix_blocks[key] == 0:
+                victims.append(key)
+                if len(victims) >= want:
+                    break
+        for key in victims:
+            del self.prefix_blocks[key]
+            del self.prefix_lru[key]
+            self.free_blocks += 1
+        self._evictable -= len(victims)
+        return len(victims)
 
     def try_allocate(self, req: Request, total_tokens: int) -> bool:
         """Reserve capacity for prompt+generation. Cached prefix blocks are
@@ -107,12 +119,16 @@ class PagedKVCache:
         # LRU sweep cannot free the very blocks this request matched on
         borrowed = self._prefix_keys(req)[:shared_blocks]
         for key in borrowed:
+            if self.prefix_blocks[key] == 0:
+                self._evictable -= 1
             self.prefix_blocks[key] += 1
         if need > self.free_blocks:
             self._evict_prefix(need - self.free_blocks)
         if need > self.free_blocks:
             for key in borrowed:                       # rollback
                 self.prefix_blocks[key] -= 1
+                if self.prefix_blocks[key] == 0:
+                    self._evictable += 1
             return False
         self.free_blocks -= need
         self.seq_blocks[req.request_id] = need
@@ -134,11 +150,15 @@ class PagedKVCache:
             self.free_blocks -= 1
             self.prefix_blocks[key] = 0
             self.prefix_lru[key] = True
+            self._evictable += 1
 
     def free(self, req: Request, *, preempted: bool = False) -> None:
         self.free_blocks += self.seq_blocks.pop(req.request_id, 0)
         for key in self.seq_borrowed.pop(req.request_id, []):
-            if key in self.prefix_blocks:
-                self.prefix_blocks[key] = max(0, self.prefix_blocks[key] - 1)
+            refs = self.prefix_blocks.get(key)
+            if refs is not None and refs > 0:
+                self.prefix_blocks[key] = refs - 1
+                if refs == 1:
+                    self._evictable += 1
         if preempted:
             self.stats.preemptions += 1

@@ -27,6 +27,9 @@ class EngineCounters:
     # aggregate sum/count is privacy-preserving — no per-request identity)
     ttft_seconds_total: float = 0.0
     ttft_count_total: int = 0
+    # actual frequency changes actuated (DVFS transitions are not free;
+    # the switching-cost reward and fleet telemetry both consume this)
+    freq_transitions_total: int = 0
 
     # gauges (point-in-time)
     requests_running: int = 0
@@ -55,6 +58,7 @@ class MetricsExporter:
             "vllm:busy_seconds_total": c.busy_seconds_total,
             "vllm:ttft_seconds_total": c.ttft_seconds_total,
             "vllm:ttft_count_total": c.ttft_count_total,
+            "vllm:freq_transitions_total": c.freq_transitions_total,
             "vllm:num_requests_running": c.requests_running,
             "vllm:num_requests_waiting": c.requests_waiting,
             "vllm:gpu_cache_usage_perc": c.gpu_cache_usage,

@@ -6,11 +6,21 @@ up to the per-iteration token budget. Finished sequences release their
 blocks immediately to admit waiting work — the "come-and-go" behaviour
 (Orca/vLLM) whose interleaving is exactly what makes phase identification
 from raw power telemetry hard (paper Fig. 1) and motivates the fingerprint.
+
+Hot-path structures are sized for fleet-scale traces: ``waiting`` is a
+deque (O(1) FCFS admission pops and preemption re-queues, no per-iteration
+list rebuild when the batch is full), and ``running`` is an
+insertion-ordered dict keyed by ``request_id`` — O(1) removal on the
+completion and preemption paths, with iteration order identical to the old
+append-only list. ``complete_iteration`` touches only the iteration's
+batch participants (the only requests whose ``generated`` advanced),
+instead of scanning every running sequence.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from collections import deque
+from typing import Deque, Dict, List, Tuple
 
 from repro.serving.kv_cache import PagedKVCache
 from repro.serving.request import Request, RequestState
@@ -48,8 +58,8 @@ class ContinuousBatchingScheduler:
         self.max_num_seqs = max_num_seqs
         self.max_batched_tokens = max_batched_tokens
         self.prefill_chunk = prefill_chunk
-        self.waiting: List[Request] = []
-        self.running: List[Request] = []
+        self.waiting: Deque[Request] = deque()
+        self.running: Dict[int, Request] = {}       # request_id -> Request
         # requests whose first output token was produced since the last
         # ``pop_first_token_events`` call — the engine drains this to
         # account TTFT at assignment time (no float-equality replay)
@@ -72,12 +82,19 @@ class ContinuousBatchingScheduler:
 
     # ------------------------------------------------------------------
     def _admit(self, now: float) -> None:
-        """FCFS admission while seq and KV budgets allow."""
-        still_waiting: List[Request] = []
-        for req in self.waiting:
+        """FCFS admission while seq and KV budgets allow.
+
+        A request that does not fit the KV budget is skipped (not
+        head-of-line blocking) and keeps its queue position relative to the
+        other non-admitted requests.
+        """
+        if not self.waiting or len(self.running) >= self.max_num_seqs:
+            return
+        skipped: List[Request] = []
+        for _ in range(len(self.waiting)):
             if len(self.running) >= self.max_num_seqs:
-                still_waiting.append(req)
-                continue
+                break
+            req = self.waiting.popleft()
             total = req.prompt_len + req.output_len
             if self.kv.try_allocate(req, total):
                 req.state = RequestState.RUNNING
@@ -85,24 +102,24 @@ class ContinuousBatchingScheduler:
                     req.first_scheduled_time = now
                 # prefix-cache hits skip that prefill work
                 req.prefilled = req.cached_tokens
-                self.running.append(req)
+                self.running[req.request_id] = req
             else:
-                still_waiting.append(req)
-        self.waiting = still_waiting
+                skipped.append(req)
+        self.waiting.extendleft(reversed(skipped))
 
     def _preempt_lowest_priority(self) -> bool:
         """Free blocks by kicking the most recent running request back to
         the queue (vLLM recompute-style preemption)."""
-        for req in reversed(self.running):
+        for req in reversed(self.running.values()):
             if req.is_prefilling:
                 continue
-            self.running.remove(req)
+            del self.running[req.request_id]
             self.kv.free(req, preempted=True)
             req.state = RequestState.WAITING
             req.prefilled = 0
             req.generated = 0
             req.cached_tokens = 0
-            self.waiting.insert(0, req)
+            self.waiting.appendleft(req)
             return True
         return False
 
@@ -113,12 +130,12 @@ class ContinuousBatchingScheduler:
         decode: List[Request] = []
         prefill: List[Tuple[Request, int]] = []
         # decodes first (latency-critical, one token each)
-        for req in self.running:
+        for req in self.running.values():
             if not req.is_prefilling and budget > 0:
                 decode.append(req)
                 budget -= 1
         # then chunked prefill
-        for req in self.running:
+        for req in self.running.values():
             if req.is_prefilling and budget > 0:
                 chunk = min(req.prefill_remaining, self.prefill_chunk, budget)
                 if chunk > 0:
@@ -134,7 +151,12 @@ class ContinuousBatchingScheduler:
 
     def complete_iteration(self, plan: BatchPlan, now: float
                            ) -> List[Request]:
-        """Apply the iteration's effects; returns newly finished requests."""
+        """Apply the iteration's effects; returns newly finished requests.
+
+        Only the plan's participants can newly finish (``generated`` only
+        advances through a plan), so completion is O(batch), not
+        O(running).
+        """
         finished: List[Request] = []
         for req, chunk in plan.prefill:
             req.prefilled += chunk
@@ -145,13 +167,15 @@ class ContinuousBatchingScheduler:
                     req.first_token_time = now
                     self._first_token_events.append(req)
                 self.kv.register_prefix(req)
+                if req.done:
+                    finished.append(req)
         for req in plan.decode:
             req.generated += 1
-        for req in list(self.running):
             if req.done:
-                req.state = RequestState.FINISHED
-                req.finish_time = now
-                self.running.remove(req)
-                self.kv.free(req)
                 finished.append(req)
+        for req in finished:
+            req.state = RequestState.FINISHED
+            req.finish_time = now
+            del self.running[req.request_id]
+            self.kv.free(req)
         return finished

@@ -1,16 +1,22 @@
-"""Policy-subsystem tests: registry construction, the shared drive loop on
+"""Policy-subsystem tests: registry construction, the shared event loop on
 engines and clusters (heterogeneous per-node mixes), the AGFT
-decision-history regression against the pre-refactor drive loop, and
-energy/behaviour smoke checks for every registered baseline."""
+decision-history regression against the pre-refactor drive loop,
+energy/behaviour smoke checks for every registered baseline, the
+switching-cost-aware reward, the SLO TTFT-budget mode, and the
+fleet-scope global controller."""
+import dataclasses
+
 import numpy as np
 import pytest
 
 from repro.configs import get_config
-from repro.core import AGFTTuner, TelemetryMonitor
+from repro.core import AGFTTuner, TelemetryMonitor, aggregate_snapshots
+from repro.core.reward import RewardCalculator, RewardConfig
 from repro.energy import A6000
-from repro.policies import (OndemandPolicy, PowerPolicy, StaticPolicy,
-                            available_policies, get_policy, register_policy,
-                            snap_to_grid)
+from repro.energy.edp import WindowStats
+from repro.policies import (GlobalFrequencyPolicy, OndemandPolicy,
+                            PowerPolicy, StaticPolicy, available_policies,
+                            get_policy, register_policy, snap_to_grid)
 from repro.serving import EngineConfig, EngineNode, InferenceEngine, drive
 from repro.serving.cluster import ServingCluster
 from repro.workloads import PROTOTYPES, generate_requests
@@ -237,6 +243,180 @@ class TestClusterPolicies:
     def test_legacy_tuners_alias(self):
         cl = ServingCluster(CFG, n_nodes=2, with_tuners=True)
         assert all(isinstance(t, AGFTTuner) for t in cl.tuners)
+
+
+# ---------------------------------------------------------------------------
+# Fleet-scope global controller (cross-node coordination baseline)
+# ---------------------------------------------------------------------------
+
+class TestFleetGlobal:
+    def test_registry_constructs_fleet_scope(self):
+        p = get_policy("global")
+        assert isinstance(p, GlobalFrequencyPolicy)
+        assert p.scope == "fleet"
+        assert "global" in available_policies()
+
+    def test_global_sets_single_frequency_on_all_nodes(self):
+        cl = ServingCluster(
+            CFG, n_nodes=3,
+            fleet_policy=get_policy("global", inner="static",
+                                    frequency_mhz=1200.0))
+        cl.submit(trace(90, seed=23))
+        cl.drain()
+        s = cl.summary()
+        assert s.finished == 90
+        assert s.node_frequencies == [1200.0, 1200.0, 1200.0]
+
+    def test_global_agft_saves_energy_vs_fmax(self):
+        base = ServingCluster(CFG, n_nodes=2, with_tuners=False)
+        base.submit(trace(200, seed=25))
+        base.drain()
+        glob = ServingCluster(CFG, n_nodes=2, fleet_policy="global")
+        glob.submit(trace(200, seed=25))
+        glob.drain()
+        b, g = base.summary(), glob.summary()
+        assert g.finished == b.finished == 200
+        assert g.energy_j < 0.9 * b.energy_j
+        # one frequency for the whole fleet, always
+        assert len(set(g.node_frequencies)) == 1
+        assert len(glob.fleet_policy.history) > 0
+
+    def test_global_comparable_to_per_node_on_same_trace(self):
+        """The acceptance comparison: fleet-global vs per-node AGFT on an
+        identical trace completes the same work; both save vs f_max."""
+        def served(**kw):
+            cl = ServingCluster(CFG, n_nodes=2, **kw)
+            cl.submit(trace(200, seed=26))
+            cl.drain()
+            return cl.summary()
+        base = served(with_tuners=False)
+        glob = served(fleet_policy="global", with_tuners=False)
+        pern = served(policies=["agft", "agft"])
+        assert glob.finished == pern.finished == base.finished
+        assert glob.energy_j < base.energy_j
+        assert pern.energy_j < base.energy_j
+
+    def test_fleet_policy_rejected_per_node(self):
+        with pytest.raises(ValueError, match="fleet"):
+            ServingCluster(CFG, n_nodes=2, policies=["global", "agft"])
+
+    def test_node_policy_rejected_as_fleet(self):
+        with pytest.raises(ValueError, match="scope"):
+            ServingCluster(CFG, n_nodes=2, fleet_policy="agft")
+
+    def test_global_maybe_act_raises(self):
+        with pytest.raises(TypeError, match="fleet-scope"):
+            get_policy("global").maybe_act(make_engine())
+
+    def test_aggregate_snapshots_sums_counters_averages_levels(self):
+        e1, e2 = make_engine(), make_engine()
+        e1.submit(trace(20, seed=27))
+        e2.submit(trace(20, seed=28))
+        for e in (e1, e2):
+            for _ in range(30):
+                e.step()
+        agg = aggregate_snapshots([e1.metrics.snapshot(),
+                                   e2.metrics.snapshot()])
+        assert agg["vllm:energy_joules_total"] == pytest.approx(
+            e1.metrics.c.energy_joules_total
+            + e2.metrics.c.energy_joules_total)
+        assert agg["vllm:current_frequency_mhz"] == pytest.approx(
+            (e1.frequency + e2.frequency) / 2)
+
+
+# ---------------------------------------------------------------------------
+# Switching-cost-aware reward (satellite; arXiv:2410.11855)
+# ---------------------------------------------------------------------------
+
+class TestSwitchingCost:
+    def _window(self):
+        return WindowStats(duration_s=0.8, energy_j=200.0, busy_s=0.7,
+                           prefill_tokens=100, cached_prompt_tokens=0,
+                           generation_tokens=500, iterations=40,
+                           requests_running=8, requests_waiting=0,
+                           gpu_cache_usage=0.5, cache_hit_rate=0.5,
+                           mean_ttft_s=0.05)
+
+    def test_switch_penalizes_reward(self):
+        # identical reference window first (the calculator self-normalizes
+        # its first sample to -1), then compare a switched vs held window
+        cfg = RewardConfig(switch_cost_j=50.0)
+        w = self._window()
+        calc_hold, calc_move = RewardCalculator(cfg), RewardCalculator(cfg)
+        calc_hold(w, switched=False)
+        calc_move(w, switched=False)
+        held = calc_hold(w, switched=False)
+        moved = calc_move(w, switched=True)
+        assert moved < held
+
+    def test_zero_cost_reproduces_paper_reward(self):
+        w = self._window()
+        base = RewardCalculator(RewardConfig())(w)
+        flagged = RewardCalculator(RewardConfig())(w, switched=True)
+        assert base == flagged                  # cost 0 -> no-op flag
+
+    def test_registry_variant_prices_switches(self):
+        t = get_policy("agft-switchcost")
+        assert t.cfg.reward.switch_cost_j > 0
+        t2 = get_policy("agft-switchcost", switch_cost_j=99.0)
+        assert t2.cfg.reward.switch_cost_j == 99.0
+
+    def test_switchcost_variant_drains_and_counts_switches(self):
+        eng = make_engine()
+        eng.submit(trace(150, seed=29))
+        t = get_policy("agft-switchcost")
+        eng.drain(policy=t)
+        assert len(eng.finished) == 150
+        # the tuner counts changes between ITS consecutive actions; the
+        # engine additionally counts the first actuation away from f_max
+        assert 0 <= eng.metrics.c.freq_transitions_total \
+            - t.switch_count <= 1
+        assert t.switch_count > 0
+
+    def test_engine_bills_transition_energy_when_priced(self):
+        hw = dataclasses.replace(A6000, dvfs_transition_cost_j=5.0)
+        eng = InferenceEngine(CFG, EngineConfig(), hardware=hw,
+                              initial_frequency=hw.f_max)
+        e0 = eng.metrics.c.energy_joules_total
+        eng.set_frequency(1200.0)               # change: billed
+        assert eng.metrics.c.energy_joules_total == e0 + 5.0
+        assert eng.metrics.c.freq_transitions_total == 1
+        eng.set_frequency(1200.0)               # no change: free
+        assert eng.metrics.c.energy_joules_total == e0 + 5.0
+        assert eng.metrics.c.freq_transitions_total == 1
+
+
+# ---------------------------------------------------------------------------
+# SLO TTFT-budget mode (satellite)
+# ---------------------------------------------------------------------------
+
+class TestSLOTTFTMode:
+    def test_registry_selects_mode(self):
+        p = get_policy("slo", mode="ttft")
+        assert p.mode == "ttft"
+        alias = get_policy("slo-ttft")
+        assert alias.mode == "ttft"
+        with pytest.raises(ValueError, match="mode"):
+            get_policy("slo", mode="e2e")
+
+    def test_ttft_mode_calibrates_and_drains(self):
+        eng = make_engine()
+        eng.submit(trace(200, seed=31))
+        p = get_policy("slo-ttft")
+        eng.drain(policy=p)
+        assert len(eng.finished) == 200
+        assert p.ttft_slo_s is not None           # calibrated its budget
+        assert p.tpot_slo_s is None               # never touched TPOT
+        freqs = [h["freq"] for h in p.history]
+        assert min(freqs) < A6000.f_max           # saved energy somewhere
+
+    def test_explicit_ttft_budget_respected(self):
+        p = get_policy("slo", mode="ttft", ttft_slo_s=0.5)
+        assert p.ttft_slo_s == 0.5
+        eng = make_engine()
+        eng.submit(trace(80, seed=32))
+        eng.drain(policy=p)
+        assert p.ttft_slo_s == 0.5                # explicit budget held
 
 
 # ---------------------------------------------------------------------------

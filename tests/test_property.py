@@ -14,8 +14,10 @@ from repro.core.linucb import LinUCBArm, LinUCBBank          # noqa: E402
 from repro.core.page_hinkley import PageHinkley              # noqa: E402
 from repro.energy import A6000, DVFSModel                    # noqa: E402
 from repro.energy.edp import WindowStats                     # noqa: E402
+from repro.configs import get_config                         # noqa: E402
 from repro.core.features import FeatureExtractor             # noqa: E402
-from repro.serving import PagedKVCache                       # noqa: E402
+from repro.serving import (EngineConfig, EngineNode, EventLoop,  # noqa: E402
+                           InferenceEngine, PagedKVCache)
 from repro.serving.request import Request                    # noqa: E402
 from repro.workloads import PROTOTYPES, generate_requests    # noqa: E402
 from repro.workloads.azure_trace import generate_azure_trace  # noqa: E402
@@ -137,6 +139,52 @@ class TestWorkloadProperties:
         assert len(reqs) > 100
         ctx_heavy = sum(1 for r in reqs if r.prompt_len > 2 * r.output_len)
         assert ctx_heavy / len(reqs) > 0.6       # 2024 mix: context-heavy
+
+
+class TestEventOrderingProperties:
+    """The discrete-event driver must never run an engine backwards in
+    time, whatever the trace shape or node count."""
+
+    @given(n_nodes=st.integers(1, 4),
+           seed=st.integers(0, 1000),
+           rate=st.floats(0.3, 8.0),
+           workload=st.sampled_from(["normal", "high_concurrency",
+                                     "long_generation"]))
+    @settings(max_examples=15, deadline=None)
+    def test_clocks_never_decrease(self, n_nodes, seed, rate, workload):
+        nodes = []
+        clocks = {}
+
+        class Probe:
+            """Records the engine clock at every iteration-complete."""
+            def __init__(self, idx):
+                self.idx = idx
+
+            def maybe_act(self, engine):
+                clocks.setdefault(self.idx, []).append(engine.clock)
+                return None
+
+        cfg = get_config("llama3-3b")
+        for i in range(n_nodes):
+            eng = InferenceEngine(cfg, EngineConfig())
+            eng.submit(generate_requests(PROTOTYPES[workload], 15,
+                                         base_rate=rate, seed=seed + i))
+            nodes.append(EngineNode(eng, Probe(i)))
+        loop = EventLoop(nodes)
+        nows = []
+        orig_push = loop._push
+
+        def push_probe(t, kind, node):
+            nows.append(loop.now)
+            orig_push(t, kind, node)
+        loop._push = push_probe
+        loop.run()
+
+        assert nows == sorted(nows)                 # virtual time monotone
+        for series in clocks.values():              # per-engine monotone
+            assert all(a <= b for a, b in zip(series, series[1:]))
+        for node in nodes:
+            assert not node.engine.has_work         # everything drained
 
 
 class TestFeatureProperties:
