@@ -4,10 +4,11 @@ from __future__ import annotations
 import json
 import os
 import time
-from typing import Dict, List, Optional, Union
+from typing import Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
+from benchmarks.parallel import pmap
 from repro.configs import get_config
 from repro.energy import A6000
 from repro.policies import PowerPolicy, get_policy
@@ -26,10 +27,21 @@ def results_path(name: str) -> str:
 
 
 def save_json(name: str, obj) -> str:
+    """Atomic write (tmp + rename) so parallel benchmark cells never leave
+    a half-written artifact behind."""
     p = results_path(name)
-    with open(p, "w") as f:
+    tmp = f"{p}.tmp.{os.getpid()}"
+    with open(tmp, "w") as f:
         json.dump(obj, f, indent=1)
+    os.replace(tmp, p)
     return p
+
+
+def _mean(vals: Sequence[float]) -> float:
+    """Mean that tolerates an empty list (a --quick run can finish zero
+    requests) without numpy's RuntimeWarning — returns NaN instead."""
+    vals = list(vals)
+    return float(np.mean(vals)) if vals else float("nan")
 
 
 def load_json(name: str):
@@ -77,7 +89,7 @@ def run_workload(workload: str, *, n_requests: int = 400,
     wall = time.perf_counter() - t0
     fin = eng.finished
     c = eng.metrics.c
-    tpot = float(np.mean([r.tpot for r in fin if r.tpot is not None]))
+    tpot = _mean([r.tpot for r in fin if r.tpot is not None])
     return {
         "workload": workload,
         "frequency": frequency,
@@ -87,9 +99,9 @@ def run_workload(workload: str, *, n_requests: int = 400,
         "sim_s": eng.clock,
         "busy_s": c.busy_seconds_total,
         "iterations": c.iterations_total,
-        "ttft_s": float(np.mean([r.ttft for r in fin])),
+        "ttft_s": _mean([r.ttft for r in fin]),
         "tpot_s": tpot,
-        "e2e_s": float(np.mean([r.e2e for r in fin])),
+        "e2e_s": _mean([r.e2e for r in fin]),
         "edp": c.energy_joules_total * tpot,
         "avg_power_w": c.energy_joules_total / max(eng.clock, 1e-9),
         "prefix_hit_rate": eng.kv.stats.hit_rate,
@@ -106,20 +118,30 @@ def strip_engine(row: Dict) -> Dict:
             if k not in ("engine", "policy_obj")}
 
 
+def _sweep_cell(args: tuple) -> Dict:
+    """One fixed-frequency trace run — module-level so it pickles into
+    ``pmap`` workers; strips the engine before crossing the process
+    boundary."""
+    workload, f, n_requests, rate, seed, ttft_weight = args
+    r = strip_engine(run_workload(workload, n_requests=n_requests, rate=rate,
+                                  frequency=float(f), seed=seed))
+    r["delay_s"] = r["tpot_s"] + ttft_weight * r["ttft_s"]
+    r["edp_sweep"] = r["energy_j"] * r["delay_s"]
+    return r
+
+
 def sweep_frequencies(workload: str, freqs: List[float], *,
                       n_requests: int = 150, rate: float = BASE_RATE,
-                      seed: int = 1,
-                      ttft_weight: float = 0.1) -> List[Dict]:
-    """EDP(f) curve; delay = tpot + ttft_weight*ttft (paper's latency mix)."""
-    rows = []
-    for f in freqs:
-        r = run_workload(workload, n_requests=n_requests, rate=rate,
-                         frequency=float(f), seed=seed)
-        r = strip_engine(r)
-        r["delay_s"] = r["tpot_s"] + ttft_weight * r["ttft_s"]
-        r["edp_sweep"] = r["energy_j"] * r["delay_s"]
-        rows.append(r)
-    return rows
+                      seed: int = 1, ttft_weight: float = 0.1,
+                      jobs: Optional[int] = None) -> List[Dict]:
+    """EDP(f) curve; delay = tpot + ttft_weight*ttft (paper's latency mix).
+
+    Cells are independent fully-seeded runs, fanned out over a process pool
+    and merged back in frequency order (deterministic regardless of
+    completion order)."""
+    return pmap(_sweep_cell,
+                [(workload, float(f), n_requests, rate, seed, ttft_weight)
+                 for f in freqs], jobs=jobs, seed=seed)
 
 
 ORACLE_SWEEPS = "oracle_sweeps.json"
@@ -144,6 +166,13 @@ def measured_oracle_frequency(workload: str, *, n_requests: int = 150,
         return float(cache[key])
     best, _ = two_stage_optimal(workload, n_requests=n_requests, rate=rate,
                                 seed=seed)
+    # re-merge before saving: a concurrently-running benchmark cell may have
+    # added other keys since we loaded (values are deterministic per key, so
+    # last-writer-wins is safe; the merge just avoids dropping them)
+    try:
+        cache = {**load_json(ORACLE_SWEEPS), **cache}
+    except (FileNotFoundError, ValueError):
+        pass
     cache[key] = float(best["frequency"])
     save_json(ORACLE_SWEEPS, cache)
     return float(best["frequency"])
@@ -152,21 +181,23 @@ def measured_oracle_frequency(workload: str, *, n_requests: int = 150,
 def two_stage_optimal(workload: str, *, coarse_step: float = 90.0,
                       fine_step: float = 15.0, fine_half: float = 90.0,
                       n_requests: int = 150, rate: float = BASE_RATE,
-                      seed: int = 1):
+                      seed: int = 1, jobs: Optional[int] = None):
     """Coarse sweep over the full range, then 15 MHz resolution around the
     coarse optimum — the paper's offline 'theoretical optimum' procedure at
-    tractable cost."""
+    tractable cost. Each stage fans its frequency cells out over the
+    process pool (the fine stage depends on the coarse argmin, so the two
+    stages themselves stay sequential)."""
     hw = A6000
     coarse = list(np.arange(hw.f_min, hw.f_max + 1, coarse_step))
     rows = sweep_frequencies(workload, coarse, n_requests=n_requests,
-                             rate=rate, seed=seed)
+                             rate=rate, seed=seed, jobs=jobs)
     best = min(rows, key=lambda r: r["edp_sweep"])
     lo = max(hw.f_min, best["frequency"] - fine_half)
     hi = min(hw.f_max, best["frequency"] + fine_half)
     fine = [f for f in np.arange(lo, hi + 1, fine_step)
             if abs(f - best["frequency"]) > 1e-9]
     rows += sweep_frequencies(workload, fine, n_requests=n_requests,
-                              rate=rate, seed=seed)
+                              rate=rate, seed=seed, jobs=jobs)
     rows.sort(key=lambda r: r["frequency"])
     best = min(rows, key=lambda r: r["edp_sweep"])
     return best, rows

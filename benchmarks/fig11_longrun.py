@@ -4,9 +4,8 @@ AGFT vs default-frequency baseline — cumulative energy and cumulative EDP.
 600 sim-seconds, so a 3600 s run spans ~6 regimes.)"""
 from __future__ import annotations
 
-import numpy as np
-
-from benchmarks.common import make_engine, save_json
+from benchmarks.common import _mean, make_engine, save_json
+from benchmarks.parallel import pmap
 from repro.policies import get_policy
 from repro.workloads import generate_azure_trace
 
@@ -31,8 +30,8 @@ def _run(duration: float, rate: float, seed: int, with_tuner: bool):
         })
         next_t = eng.clock + 30.0
     fin = eng.finished
-    tpot = float(np.mean([r.tpot for r in fin if r.tpot is not None]))
-    ttft = float(np.mean([r.ttft for r in fin]))
+    tpot = _mean([r.tpot for r in fin if r.tpot is not None])
+    ttft = _mean([r.ttft for r in fin])
     return {
         "series": series,
         "energy_j": eng.metrics.c.energy_joules_total,
@@ -48,10 +47,15 @@ def _run(duration: float, rate: float, seed: int, with_tuner: bool):
     }
 
 
-def run(duration: float = 3600.0, rate: float = 3.0, seed: int = 3,
-        quiet: bool = False):
-    base = _run(duration, rate, seed, with_tuner=False)
-    agft = _run(duration, rate, seed, with_tuner=True)
+def _cell(args):
+    return _run(*args)
+
+
+def unit_args(duration: float, rate: float = 3.0, seed: int = 3):
+    return [(duration, rate, seed, False), (duration, rate, seed, True)]
+
+
+def _assemble(base, agft, quiet: bool = False):
     out = {
         "baseline": base,
         "agft": agft,
@@ -70,6 +74,13 @@ def run(duration: float = 3600.0, rate: float = 3.0, seed: int = 3,
               f"TPOT +{out['tpot_overhead_pct']:.1f}% | "
               f"reopened {agft['tuner']['reopened']}x")
     return out
+
+
+def run(duration: float = 3600.0, rate: float = 3.0, seed: int = 3,
+        quiet: bool = False):
+    # baseline and AGFT traces are independent: one process each
+    base, agft = pmap(_cell, unit_args(duration, rate, seed), seed=seed)
+    return _assemble(base, agft, quiet=quiet)
 
 
 def main():

@@ -4,6 +4,7 @@ from __future__ import annotations
 
 from benchmarks.common import save_json, two_stage_optimal
 from benchmarks.fig5_workloads import WORKLOADS
+from benchmarks.parallel import pmap
 
 # paper Fig. 6 reported optima (MHz) for qualitative comparison
 PAPER_OPTIMA = {"normal": 1230, "long_context": 1395,
@@ -11,27 +12,43 @@ PAPER_OPTIMA = {"normal": 1230, "long_context": 1395,
                 "high_cache_hit": 1200}
 
 
-def run(n_requests: int = 120, quiet: bool = False):
-    out = {}
+def _cell(args):
+    """Two-stage sweep for one workload prototype (one pmap cell; the
+    inner frequency grid runs serially when nested in a worker)."""
+    w, n_requests = args
+    best, rows = two_stage_optimal(w, n_requests=n_requests)
+    # U-shape check: optimum strictly interior
+    freqs = [r["frequency"] for r in rows]
+    interior = (min(freqs) < best["frequency"] < max(freqs))
+    return {
+        "optimal_freq": best["frequency"],
+        "optimal_edp": best["edp_sweep"],
+        "interior_optimum": bool(interior),
+        "paper_optimum": PAPER_OPTIMA[w],
+        "curve": [{"f": r["frequency"], "edp": r["edp_sweep"],
+                   "energy_j": r["energy_j"], "delay_s": r["delay_s"]}
+                  for r in rows],
+    }
+
+
+def unit_args(n_requests: int):
+    return [(w, n_requests) for w in WORKLOADS]
+
+
+def _assemble(cells, quiet: bool = False):
+    out = dict(zip(WORKLOADS, cells))
     for w in WORKLOADS:
-        best, rows = two_stage_optimal(w, n_requests=n_requests)
-        # U-shape check: optimum strictly interior
-        freqs = [r["frequency"] for r in rows]
-        interior = (min(freqs) < best["frequency"] < max(freqs))
-        out[w] = {
-            "optimal_freq": best["frequency"],
-            "optimal_edp": best["edp_sweep"],
-            "interior_optimum": bool(interior),
-            "paper_optimum": PAPER_OPTIMA[w],
-            "curve": [{"f": r["frequency"], "edp": r["edp_sweep"],
-                       "energy_j": r["energy_j"], "delay_s": r["delay_s"]}
-                      for r in rows],
-        }
         if not quiet:
-            print(f"{w:18s} f*={best['frequency']:6.0f} MHz "
-                  f"(paper {PAPER_OPTIMA[w]}) interior={interior}")
+            print(f"{w:18s} f*={out[w]['optimal_freq']:6.0f} MHz "
+                  f"(paper {PAPER_OPTIMA[w]}) "
+                  f"interior={out[w]['interior_optimum']}")
     save_json("fig6_freq_sweep.json", out)
     return out
+
+
+def run(n_requests: int = 120, quiet: bool = False):
+    return _assemble(pmap(_cell, unit_args(n_requests), seed=1),
+                     quiet=quiet)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,74 @@
+"""Process-parallel, order-preserving map for benchmark grids.
+
+Every benchmark grid in this repo is an embarrassingly-parallel list of
+fully-seeded simulation cells (one trace run per frequency / workload /
+policy), so the only orchestration needed is: fan the cells out over a
+``ProcessPoolExecutor``, keep the result order identical to the input order
+(deterministic merge — results never depend on completion order), and never
+nest pools (a worker that fans out again would oversubscribe the host).
+
+Workers are marked via an environment variable inherited by (or injected
+into) child processes; ``pmap`` inside a marked worker degrades to a serial
+loop. Each cell also reseeds numpy's *global* RNG from (base_seed, index)
+before running, so any stray ``np.random`` use stays deterministic
+per-cell regardless of scheduling.
+
+Pools use the ``spawn`` start method: the benchmark mains transitively
+import JAX (multithreaded), and forking a multithreaded parent can
+deadlock. Spawned workers re-import their modules — a one-time ~seconds
+cost per pool, irrelevant for the long-lived top-level pools used here
+(unit fns and args are picklable by construction).
+"""
+from __future__ import annotations
+
+import multiprocessing
+import os
+from concurrent.futures import ProcessPoolExecutor
+from typing import Callable, List, Optional, Sequence, TypeVar
+
+T = TypeVar("T")
+R = TypeVar("R")
+
+_WORKER_ENV = "REPRO_BENCH_WORKER"
+
+
+def default_jobs() -> int:
+    return max(1, os.cpu_count() or 1)
+
+
+def in_worker() -> bool:
+    return os.environ.get(_WORKER_ENV) == "1"
+
+
+def _mark_worker() -> None:
+    os.environ[_WORKER_ENV] = "1"
+
+
+def _seeded_call(fn: Callable[[T], R], item: T, seed: Optional[int],
+                 idx: int) -> R:
+    if seed is not None:
+        import numpy as np
+        np.random.seed((seed + idx) % (2 ** 32))
+    return fn(item)
+
+
+def pmap(fn: Callable[[T], R], items: Sequence[T], *,
+         jobs: Optional[int] = None, seed: Optional[int] = 0) -> List[R]:
+    """Map ``fn`` over ``items`` with process parallelism.
+
+    Results are returned in input order (deterministic merge). Falls back
+    to a serial loop when ``jobs <= 1``, when there is at most one item, or
+    when already inside a pmap worker (no nested pools). ``fn`` and the
+    items must be picklable — module-level functions with plain-data
+    arguments; strip engine/policy objects from returned rows.
+    """
+    items = list(items)
+    jobs = default_jobs() if jobs is None else jobs
+    if jobs <= 1 or len(items) <= 1 or in_worker():
+        return [_seeded_call(fn, it, seed, i) for i, it in enumerate(items)]
+    with ProcessPoolExecutor(max_workers=min(jobs, len(items)),
+                             mp_context=multiprocessing.get_context("spawn"),
+                             initializer=_mark_worker) as ex:
+        futs = [ex.submit(_seeded_call, fn, it, seed, i)
+                for i, it in enumerate(items)]
+        return [f.result() for f in futs]

@@ -6,27 +6,32 @@ they are implicitly measured against.
 
 The baseline engine carries an observe-only TelemetryRecorder policy, so
 its per-window energy series is measured through the same monitor boundary
-as every other policy (no more average-power estimates)."""
+as every other policy (no more average-power estimates).
+
+Each policy run is an independent fully-seeded simulation: ``_serve_unit``
+is the process-pool cell (returns plain data — request timing tuples and
+the policy's window history — so payloads pickle cheaply), and
+``_assemble`` folds the cells into the phase tables deterministically."""
 from __future__ import annotations
 
-from typing import Sequence
+from typing import Dict, List, Sequence
 
-import numpy as np
-
-from benchmarks.common import (measured_oracle_frequency, run_workload,
-                               save_json)
+from benchmarks.common import (_mean, measured_oracle_frequency,
+                               run_workload, save_json)
+from benchmarks.parallel import pmap
 
 DEFAULT_POLICIES = ("agft", "static", "ondemand", "oracle")
 
 
-def _phase(reqs, lo, hi):
-    rs = [r for r in reqs if r.finish_time and lo <= r.finish_time < hi]
+def _phase(reqs: List[tuple], lo: float, hi: float):
+    """reqs: (finish_time, ttft, tpot, e2e) tuples from ``_serve_unit``."""
+    rs = [r for r in reqs if r[0] and lo <= r[0] < hi]
     if not rs:
         return None
     return {
-        "ttft": float(np.mean([r.ttft for r in rs])),
-        "tpot": float(np.mean([r.tpot for r in rs if r.tpot is not None])),
-        "e2e": float(np.mean([r.e2e for r in rs])),
+        "ttft": _mean([r[1] for r in rs]),
+        "tpot": _mean([r[2] for r in rs if r[2] is not None]),
+        "e2e": _mean([r[3] for r in rs]),
         "n": len(rs),
     }
 
@@ -36,41 +41,54 @@ def _window_energy(history, lo, hi):
                if h["energy_j"] and lo <= h["t"] < hi)
 
 
-def _serve(policy_name, n_requests, rate, seed):
-    """One policy on the shared trace via the common runner; returns
-    (engine, policy, totals-dict keyed like the phase tables). The oracle
-    row is pinned at the TRACE-MEASURED sweep optimum (two-stage offline
-    procedure), not the analytic cost-model sweep."""
+def _serve_unit(args) -> Dict:
+    """One policy on the shared trace; plain-data payload for the pool.
+    The oracle row is pinned at the TRACE-MEASURED sweep optimum (two-stage
+    offline procedure), not the analytic cost-model sweep."""
+    policy_name, n_requests, rate, seed = args
     kw = ({"frequency_mhz": measured_oracle_frequency("normal", rate=rate,
                                                       seed=seed)}
           if policy_name == "oracle" else None)
     row = run_workload("normal", n_requests=n_requests, rate=rate,
                        policy=policy_name, policy_kwargs=kw, seed=seed)
-    totals = {"energy_j": row["energy_j"], "ttft": row["ttft_s"],
-              "tpot": row["tpot_s"], "e2e": row["e2e_s"],
-              "edp": row["edp"], "finished": row["finished"]}
-    return row["engine"], row["policy_obj"], totals
+    eng, pol = row["engine"], row["policy_obj"]
+    return {
+        "policy": policy_name,
+        "totals": {"energy_j": row["energy_j"], "ttft": row["ttft_s"],
+                   "tpot": row["tpot_s"], "e2e": row["e2e_s"],
+                   "edp": row["edp"], "finished": row["finished"]},
+        "clock": eng.clock,
+        "history": list(getattr(pol, "history", [])),
+        "converged_round": getattr(pol, "converged_round", None),
+        "finished_reqs": [(r.finish_time, r.ttft, r.tpot, r.e2e)
+                          for r in eng.finished],
+    }
 
 
-def run(n_requests: int = 2500, rate: float = 3.0, seed: int = 2,
-        policies: Sequence[str] = DEFAULT_POLICIES, quiet: bool = False):
-    # baseline: fixed f_max, observed through the same telemetry boundary
-    beng, brec, base_tot = _serve("observer", n_requests, rate, seed)
+def unit_args(n_requests: int, rate: float = 3.0, seed: int = 2,
+              policies: Sequence[str] = DEFAULT_POLICIES) -> List[tuple]:
+    """Cells for the harness: the observer baseline first, then one cell
+    per compared policy (order fixed — the merge relies on it)."""
+    return [("observer", n_requests, rate, seed)] + \
+        [(p, n_requests, rate, seed) for p in policies]
 
-    runs = {name: _serve(name, n_requests, rate, seed) for name in policies}
-    eng, tuner, _ = runs.get("agft") or _serve("agft", n_requests, rate,
-                                               seed)
 
-    post = [h for h in tuner.history if h["converged"]]
-    t_conv = post[0]["t"] if post else eng.clock
-    end = min(eng.clock, beng.clock)
+def _assemble(payloads: List[Dict], quiet: bool = False,
+              policies: Sequence[str] = DEFAULT_POLICIES) -> Dict:
+    base = payloads[0]
+    runs = {p["policy"]: p for p in payloads[1:]}
+    agft = runs["agft"]
+
+    post = [h for h in agft["history"] if h["converged"]]
+    t_conv = post[0]["t"] if post else agft["clock"]
+    end = min(agft["clock"], base["clock"])
 
     def table(lo, hi):
-        a = _phase(eng.finished, lo, hi)
-        b = _phase(beng.finished, lo, hi)
+        a = _phase(agft["finished_reqs"], lo, hi)
+        b = _phase(base["finished_reqs"], lo, hi)
         # per-window energy over the span — measured on BOTH sides now
-        ea = _window_energy(tuner.history, lo, hi)
-        eb = _window_energy(brec.history, lo, hi)
+        ea = _window_energy(agft["history"], lo, hi)
+        eb = _window_energy(base["history"], lo, hi)
         if a is None or b is None or eb <= 0:
             return None
         return {
@@ -85,8 +103,10 @@ def run(n_requests: int = 2500, rate: float = 3.0, seed: int = 2,
             },
         }
 
+    base_tot = base["totals"]
     comparison = {}
-    for name, (_, _, tot) in runs.items():
+    for name in policies:
+        tot = runs[name]["totals"]
         comparison[name] = {
             **tot,
             "diff_pct": {k: 100 * (tot[k] / base_tot[k] - 1)
@@ -95,7 +115,7 @@ def run(n_requests: int = 2500, rate: float = 3.0, seed: int = 2,
 
     out = {
         "convergence_time_s": t_conv,
-        "convergence_round": tuner.converged_round,
+        "convergence_round": agft["converged_round"],
         "learning_phase": table(0.0, t_conv),
         "stable_phase": table(t_conv, end),
         "baseline_totals": base_tot,
@@ -118,6 +138,15 @@ def run(n_requests: int = 2500, rate: float = 3.0, seed: int = 2,
             print(f"policy {name:10s}: " + " ".join(
                 f"{k} {v:+.1f}%" for k, v in d.items()))
     return out
+
+
+def run(n_requests: int = 2500, rate: float = 3.0, seed: int = 2,
+        policies: Sequence[str] = DEFAULT_POLICIES, quiet: bool = False):
+    args = unit_args(n_requests, rate, seed, policies)
+    if "agft" not in policies:
+        args.append(("agft", n_requests, rate, seed))
+    payloads = pmap(_serve_unit, args, seed=seed)
+    return _assemble(payloads, quiet=quiet, policies=policies)
 
 
 if __name__ == "__main__":

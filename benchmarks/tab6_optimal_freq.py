@@ -10,8 +10,9 @@ import numpy as np
 
 from benchmarks.common import (load_json, make_engine,
                                measured_oracle_frequency, run_workload,
-                               save_json)
+                               save_json, strip_engine)
 from benchmarks.fig5_workloads import WORKLOADS
+from benchmarks.parallel import pmap
 from repro.policies import get_policy
 from repro.workloads import PROTOTYPES, generate_requests
 
@@ -39,39 +40,61 @@ def online_frequency(workload: str, *, n_requests: int = 1500,
     return float(np.mean(post))
 
 
+def _cell(args):
+    """Per-workload column: online AGFT convergence + trace-measured oracle
+    replay (independent across workloads — one pmap cell each)."""
+    w, offline, n_requests = args
+    online = online_frequency(w, n_requests=n_requests)
+    dev = 100 * (online - offline) / offline
+    # trace-measured oracle: two-stage sweep optimum, replayed through
+    # the registry policy on the same prototype
+    oracle_mhz = measured_oracle_frequency(w)
+    orc = strip_engine(run_workload(w, n_requests=min(n_requests, 600),
+                                    policy="oracle",
+                                    policy_kwargs={
+                                        "frequency_mhz": oracle_mhz},
+                                    seed=4))
+    return {"offline_mhz": offline, "online_mhz": round(online, 1),
+            "deviation_pct": round(dev, 2),
+            "oracle_measured_mhz": oracle_mhz,
+            "oracle_energy_j": orc["energy_j"],
+            "oracle_edp": orc["edp"],
+            "paper": {"offline": PAPER[w][0], "online": PAPER[w][1],
+                      "deviation_pct": PAPER[w][2]}}
+
+
+def unit_args(n_requests: int, sweep: dict):
+    """Cells from fig6's sweep output (``{workload: {"optimal_freq": ..}}``)
+    — pass the reduced value, not the artifact path, so the harness can
+    chain fig6 -> tab6 without a filesystem rendezvous."""
+    return [(w, sweep[w]["optimal_freq"], n_requests) for w in WORKLOADS]
+
+
+def _assemble(cells, quiet: bool = False):
+    out = dict(zip(WORKLOADS, cells))
+    for w in WORKLOADS:
+        row = out[w]
+        if not quiet:
+            print(f"{w:18s} offline {row['offline_mhz']:6.0f}  "
+                  f"online {row['online_mhz']:6.0f}  "
+                  f"oracle(meas) {row['oracle_measured_mhz']:6.0f}  "
+                  f"dev {row['deviation_pct']:+5.1f}% "
+                  f"(paper {PAPER[w][2]:+.1f}%)")
+    devs = [abs(v["deviation_pct"]) for v in out.values()
+            if isinstance(v, dict)]
+    out["max_abs_deviation_pct"] = max(devs)
+    save_json("tab6_optimal_freq.json", out)
+    return out
+
+
 def run(n_requests: int = 1500, quiet: bool = False):
     try:
         sweep = load_json("fig6_freq_sweep.json")
     except FileNotFoundError:
         from benchmarks.fig6_freq_sweep import run as run_fig6
         sweep = run_fig6(quiet=True)
-    out = {}
-    for w in WORKLOADS:
-        offline = sweep[w]["optimal_freq"]
-        online = online_frequency(w, n_requests=n_requests)
-        dev = 100 * (online - offline) / offline
-        # trace-measured oracle: two-stage sweep optimum, replayed through
-        # the registry policy on the same prototype
-        oracle_mhz = measured_oracle_frequency(w)
-        orc = run_workload(w, n_requests=min(n_requests, 600),
-                           policy="oracle",
-                           policy_kwargs={"frequency_mhz": oracle_mhz},
-                           seed=4)
-        out[w] = {"offline_mhz": offline, "online_mhz": round(online, 1),
-                  "deviation_pct": round(dev, 2),
-                  "oracle_measured_mhz": oracle_mhz,
-                  "oracle_energy_j": orc["energy_j"],
-                  "oracle_edp": orc["edp"],
-                  "paper": {"offline": PAPER[w][0], "online": PAPER[w][1],
-                            "deviation_pct": PAPER[w][2]}}
-        if not quiet:
-            print(f"{w:18s} offline {offline:6.0f}  online {online:6.0f}  "
-                  f"oracle(meas) {oracle_mhz:6.0f}  "
-                  f"dev {dev:+5.1f}% (paper {PAPER[w][2]:+.1f}%)")
-    devs = [abs(v["deviation_pct"]) for v in out.values()]
-    out["max_abs_deviation_pct"] = max(devs)
-    save_json("tab6_optimal_freq.json", out)
-    return out
+    return _assemble(pmap(_cell, unit_args(n_requests, sweep), seed=4),
+                     quiet=quiet)
 
 
 if __name__ == "__main__":

@@ -5,16 +5,32 @@ Each frequency is an arm with ridge-regression sufficient statistics
 selected by  argmax theta_fᵀx + alpha sqrt(xᵀ A_f⁻¹ x)  during exploration
 and argmax theta_fᵀx during exploitation. A⁻¹ is maintained incrementally
 (Sherman-Morrison), so a decision is O(|F| d²) — microseconds at d=7.
+
+Storage is structure-of-arrays: the bank holds stacked ``(n_arms, d, d)``
+``A``/``A_inv`` and ``(n_arms, d)`` ``b``/``theta`` plus per-arm counters,
+kept in ascending-frequency order. Selection rules are einsum-vectorized
+over the stack (one numpy dispatch per decision instead of one per arm),
+and updates are in-place row operations. The historical dict-of-arms API —
+``bank.arms[f].update(...)``, ``arm.n``, ``arm.ucb(x, alpha)`` — survives
+as a zero-copy view (:class:`_ArmView`/:class:`_ArmMap`) so the pruning and
+refinement frameworks work unchanged.
+
+Arm order is deterministic: always ascending frequency, regardless of
+``rebuild``/``remove`` history, so tie-breaks and Thompson's RNG-draw-to-arm
+pairing never depend on action-space mutation order.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, List, Optional
+from collections.abc import Mapping
+from typing import Dict, Iterator, List, Optional, Sequence
 
 import numpy as np
 
 
 class LinUCBArm:
+    """A standalone single arm (kept for direct use and as the reference
+    implementation the vectorized bank is tested against)."""
+
     def __init__(self, dim: int, ridge: float = 1.0):
         self.dim = dim
         self.A = np.eye(dim) * ridge
@@ -56,6 +72,108 @@ class LinUCBArm:
         return self.predict(x) + bonus
 
 
+class _ArmView:
+    """Live view of one bank row presenting the ``LinUCBArm`` interface.
+
+    Attribute reads return (writable) slices of the bank's stacked arrays;
+    ``update`` delegates to the bank's in-place row update. Views resolve
+    their row index on every access, so they stay correct across
+    ``remove``/``rebuild`` (and raise ``KeyError`` once the arm is gone).
+    """
+
+    __slots__ = ("_bank", "f")
+
+    def __init__(self, bank: "LinUCBBank", f: float):
+        self._bank = bank
+        self.f = f
+
+    @property
+    def _i(self) -> int:
+        return self._bank._index[self.f]
+
+    @property
+    def dim(self) -> int:
+        return self._bank.dim
+
+    @property
+    def A(self) -> np.ndarray:
+        return self._bank._A[self._i]
+
+    @property
+    def A_inv(self) -> np.ndarray:
+        return self._bank._A_inv[self._i]
+
+    @property
+    def b(self) -> np.ndarray:
+        return self._bank._b[self._i]
+
+    @property
+    def theta(self) -> np.ndarray:
+        return self._bank._theta[self._i]
+
+    @property
+    def n(self) -> int:
+        return int(self._bank._n[self._i])
+
+    @property
+    def reward_sum(self) -> float:
+        return float(self._bank._reward_sum[self._i])
+
+    @property
+    def edp_sum(self) -> float:
+        return float(self._bank._edp_sum[self._i])
+
+    @property
+    def mean_reward(self) -> float:
+        n = self.n
+        return self.reward_sum / n if n else 0.0
+
+    @property
+    def mean_edp(self) -> float:
+        n = self.n
+        return self.edp_sum / n if n else float("inf")
+
+    def update(self, x: np.ndarray, reward: float,
+               edp: Optional[float] = None) -> None:
+        self._bank.update_arm(self.f, x, reward, edp)
+
+    def predict(self, x: np.ndarray) -> float:
+        return float(self.theta @ x)
+
+    def ucb(self, x: np.ndarray, alpha: float) -> float:
+        bonus = alpha * float(np.sqrt(max(x @ self.A_inv @ x, 0.0)))
+        return self.predict(x) + bonus
+
+    def __repr__(self) -> str:
+        return f"_ArmView(f={self.f}, n={self.n})"
+
+
+class _ArmMap(Mapping):
+    """Read-only mapping ``frequency -> _ArmView`` over the bank, iterating
+    in ascending-frequency order. Mutation goes through the bank
+    (``remove``/``rebuild``), never through this map."""
+
+    __slots__ = ("_bank",)
+
+    def __init__(self, bank: "LinUCBBank"):
+        self._bank = bank
+
+    def __getitem__(self, f) -> _ArmView:
+        f = float(f)
+        if f not in self._bank._index:
+            raise KeyError(f)
+        return _ArmView(self._bank, f)
+
+    def __iter__(self) -> Iterator[float]:
+        return iter(self._bank._f)
+
+    def __len__(self) -> int:
+        return len(self._bank._f)
+
+    def __contains__(self, f) -> bool:           # avoid Mapping's try/except
+        return float(f) in self._bank._index
+
+
 class LinUCBBank:
     """The arm set over the current (mutable) frequency action space.
 
@@ -68,78 +186,170 @@ class LinUCBBank:
         in benchmarks/ext_thompson.py.
     """
 
-    def __init__(self, frequencies: List[float], dim: int,
+    def __init__(self, frequencies: Sequence[float], dim: int,
                  ridge: float = 1.0, seed: int = 0):
         self.dim = dim
         self.ridge = ridge
         self.rng = np.random.default_rng(seed)
-        self.arms: Dict[float, LinUCBArm] = {
-            float(f): LinUCBArm(dim, ridge) for f in frequencies}
+        self.arms = _ArmMap(self)
+        self._alloc(sorted({float(f) for f in frequencies}))
+
+    # -- storage -------------------------------------------------------
+    def _alloc(self, freqs: List[float]) -> None:
+        n, d = len(freqs), self.dim
+        self._f: List[float] = freqs              # ascending, deduplicated
+        self._index: Dict[float, int] = {f: i for i, f in enumerate(freqs)}
+        eye = np.eye(d)
+        self._A = np.broadcast_to(eye * self.ridge, (n, d, d)).copy()
+        self._A_inv = np.broadcast_to(eye / self.ridge, (n, d, d)).copy()
+        self._b = np.zeros((n, d))
+        self._theta = np.zeros((n, d))
+        self._n = np.zeros(n, dtype=np.int64)
+        self._reward_sum = np.zeros(n)
+        self._edp_sum = np.zeros(n)
+
+    def _drop_rows(self, keep: np.ndarray) -> None:
+        self._f = [f for f, k in zip(self._f, keep) if k]
+        self._index = {f: i for i, f in enumerate(self._f)}
+        self._A = self._A[keep]
+        self._A_inv = self._A_inv[keep]
+        self._b = self._b[keep]
+        self._theta = self._theta[keep]
+        self._n = self._n[keep]
+        self._reward_sum = self._reward_sum[keep]
+        self._edp_sum = self._edp_sum[keep]
 
     # ------------------------------------------------------------------
     @property
     def frequencies(self) -> List[float]:
-        return sorted(self.arms.keys())
+        return list(self._f)
 
     def remove(self, f: float) -> None:
-        self.arms.pop(float(f), None)
+        i = self._index.get(float(f))
+        if i is None:
+            return
+        keep = np.ones(len(self._f), dtype=bool)
+        keep[i] = False
+        self._drop_rows(keep)
 
-    def rebuild(self, frequencies: List[float],
+    def rebuild(self, frequencies: Sequence[float],
                 warm_from: Optional[float] = None) -> None:
         """Refinement: re-center the action space. Arms for surviving
         frequencies keep their statistics; NEW arms are warm-started from
         the anchor arm's sufficient statistics (nearby frequencies behave
         similarly — a sane prior that avoids re-exploring a fresh grid from
         scratch after every refinement)."""
-        proto = self.arms.get(float(warm_from)) if warm_from is not None \
+        old_index, old = self._index, (self._A, self._A_inv, self._b,
+                                       self._theta, self._n,
+                                       self._reward_sum, self._edp_sum)
+        proto = old_index.get(float(warm_from)) if warm_from is not None \
             else None
-        new: Dict[float, LinUCBArm] = {}
-        for f in frequencies:
-            f = float(f)
-            arm = self.arms.get(f)
-            if arm is None:
-                arm = LinUCBArm(self.dim, self.ridge)
-                if proto is not None and proto.n > 0:
-                    arm.A = proto.A.copy()
-                    arm.A_inv = proto.A_inv.copy()
-                    arm.b = proto.b.copy()
-                    arm.theta = proto.theta.copy()
-                    arm.n = proto.n
-                    arm.reward_sum = proto.reward_sum
-                    arm.edp_sum = proto.edp_sum
-            new[f] = arm
-        self.arms = new
+        if proto is not None and old[4][proto] == 0:
+            proto = None                          # untouched anchor: no prior
+        self._alloc(sorted({float(f) for f in frequencies}))
+        for f, i in self._index.items():
+            src = old_index.get(f, proto)
+            if src is None:
+                continue
+            self._A[i] = old[0][src]
+            self._A_inv[i] = old[1][src]
+            self._b[i] = old[2][src]
+            self._theta[i] = old[3][src]
+            self._n[i] = old[4][src]
+            self._reward_sum[i] = old[5][src]
+            self._edp_sum[i] = old[6][src]
 
-    # ------------------------------------------------------------------
+    # -- updates -------------------------------------------------------
+    def update_arm(self, f: float, x: np.ndarray, reward: float,
+                   edp: Optional[float] = None) -> None:
+        """Sherman-Morrison rank-1 update of one arm, in place on the
+        stacked arrays (arithmetic-identical to ``LinUCBArm.update``)."""
+        i = self._index[float(f)]
+        self._A[i] += np.outer(x, x)
+        A_inv = self._A_inv[i]
+        Ax = A_inv @ x
+        A_inv -= np.outer(Ax, Ax) / (1.0 + x @ Ax)
+        b = self._b[i]
+        b += reward * x
+        self._theta[i] = A_inv @ b
+        self._n[i] += 1
+        self._reward_sum[i] += reward
+        if edp is not None:
+            self._edp_sum[i] += edp
+
+    def update_arms(self, fs: Sequence[float], xs: np.ndarray,
+                    rewards: Sequence[float],
+                    edps: Optional[Sequence[float]] = None) -> None:
+        """Batched Sherman-Morrison: credit one observation to each of
+        several DISTINCT arms in a single einsum pass. No in-tree policy
+        batches credits yet (the tuner settles one window at a time via
+        ``update_arm``); this is the vectorized-bank API for controllers
+        that do, kept numerically equivalent by the hot-path tests."""
+        idx = np.array([self._index[float(f)] for f in fs])
+        if len(set(idx.tolist())) != len(idx):
+            raise ValueError("update_arms requires distinct arms; "
+                             "sequential rank-1 updates to one arm do not "
+                             "commute with batching")
+        X = np.asarray(xs, dtype=float).reshape(len(idx), self.dim)
+        r = np.asarray(rewards, dtype=float)
+        self._A[idx] += np.einsum("bi,bj->bij", X, X)
+        Ax = np.einsum("bij,bj->bi", self._A_inv[idx], X)
+        denom = 1.0 + np.einsum("bi,bi->b", X, Ax)
+        self._A_inv[idx] -= np.einsum("bi,bj->bij", Ax, Ax) \
+            / denom[:, None, None]
+        self._b[idx] += r[:, None] * X
+        self._theta[idx] = np.einsum("bij,bj->bi", self._A_inv[idx],
+                                     self._b[idx])
+        self._n[idx] += 1
+        self._reward_sum[idx] += r
+        if edps is not None:
+            self._edp_sum[idx] += np.asarray(edps, dtype=float)
+
+    # -- selection (vectorized over the stack) -------------------------
+    def _scores_ucb(self, x: np.ndarray, alpha: float) -> np.ndarray:
+        quad = np.einsum("i,aij,j->a", x, self._A_inv, x)
+        return self._theta @ x + alpha * np.sqrt(np.maximum(quad, 0.0))
+
     def select_ucb(self, x: np.ndarray, alpha: float) -> float:
         # untried arms first (infinite-bonus convention), lowest-f first so
         # exploration sweeps upward through the cheap range
-        untried = [f for f, a in self.arms.items() if a.n == 0]
-        if untried:
-            return min(untried)
-        return max(self.arms, key=lambda f: self.arms[f].ucb(x, alpha))
+        untried = self._n == 0
+        if untried.any():
+            return self._f[int(np.argmax(untried))]
+        return self.argmax_ucb(x, alpha)
+
+    def argmax_ucb(self, x: np.ndarray, alpha: float) -> float:
+        """Highest-UCB arm, ignoring the untried-arm convention (used by
+        predictive refinement to pick its anchor). Ties break to the lowest
+        frequency."""
+        return self._f[int(np.argmax(self._scores_ucb(x, alpha)))]
 
     def select_thompson(self, x: np.ndarray, nu: float = 0.3) -> float:
-        """Linear Thompson sampling over the arm set."""
-        best_f, best_v = None, -np.inf
-        for f, arm in self.arms.items():
-            # sample theta ~ N(theta, nu^2 A^-1) via Cholesky of A_inv
-            try:
-                L = np.linalg.cholesky(
-                    (arm.A_inv + arm.A_inv.T) / 2.0 + 1e-12 * np.eye(self.dim))
-            except np.linalg.LinAlgError:
-                L = np.eye(self.dim)
-            theta_s = arm.theta + nu * L @ self.rng.standard_normal(self.dim)
-            v = float(theta_s @ x)
-            if v > best_v:
-                best_f, best_v = f, v
-        return best_f
+        """Linear Thompson sampling over the arm set: one batched Cholesky
+        of the (symmetrized) covariances, one (n_arms, d) normal draw."""
+        n, d = len(self._f), self.dim
+        sym = (self._A_inv + np.swapaxes(self._A_inv, 1, 2)) / 2.0 \
+            + 1e-12 * np.eye(d)
+        try:
+            L = np.linalg.cholesky(sym)
+        except np.linalg.LinAlgError:
+            L = np.empty_like(sym)                # salvage the healthy arms
+            for i in range(n):
+                try:
+                    L[i] = np.linalg.cholesky(sym[i])
+                except np.linalg.LinAlgError:
+                    L[i] = np.eye(d)
+        z = self.rng.standard_normal((n, d))
+        theta_s = self._theta + nu * np.einsum("aij,aj->ai", L, z)
+        return self._f[int(np.argmax(theta_s @ x))]
 
     def select_greedy(self, x: np.ndarray) -> float:
-        return max(self.arms, key=lambda f: self.arms[f].predict(x))
+        return self._f[int(np.argmax(self._theta @ x))]
 
     def best_historical(self, min_samples: int = 1) -> Optional[float]:
-        cands = {f: a for f, a in self.arms.items() if a.n >= min_samples}
-        if not cands:
+        mask = self._n >= min_samples
+        if not mask.any():
             return None
-        return min(cands, key=lambda f: cands[f].mean_edp)
+        mean_edp = np.full(len(self._f), np.inf)
+        np.divide(self._edp_sum, self._n, out=mean_edp, where=mask)
+        return self._f[int(np.argmin(mean_edp))]

@@ -59,8 +59,7 @@ class MixedMaturityRefinement:
             if anchor is None:
                 return None
         else:
-            anchor = max(bank.arms,
-                         key=lambda f: bank.arms[f].ucb(x_t, self.ucb_alpha))
+            anchor = bank.argmax_ucb(x_t, self.ucb_alpha)
             mode = "predictive"
         grid = pruner.filter_candidates(self._candidate_grid(anchor))
         if len(grid) < 3:

@@ -2,8 +2,17 @@
 
 Used by the simulated execution backend (engine iterations) and cross-checked
 against the XLA-compiled cost_analysis in the roofline benchmarks.
+
+The config-dependent terms (parameter counts, attention-layer fraction,
+KV bytes/token) are pure functions of the frozen ``ModelConfig``, so
+:class:`CostModel` hoists them out of the per-iteration path once and the
+remaining per-call work is a handful of fused multiply-adds. The module-level
+``iteration_cost`` keeps the original functional API on top of a cached
+``CostModel`` per config.
 """
 from __future__ import annotations
+
+from functools import lru_cache
 
 from repro.models.common import ModelConfig
 
@@ -91,40 +100,78 @@ def attention_layers(cfg: ModelConfig) -> float:
     return cfg.num_layers
 
 
+class CostModel:
+    """Per-``ModelConfig`` iteration-cost evaluator with every
+    config-derived term precomputed once.
+
+    ``iteration_cost`` here is arithmetic-identical (same expressions, same
+    association order) to the historical module-level function, so simulated
+    clocks/energies are bit-for-bit unchanged — it just stops re-deriving
+    ``active_param_count``/``attention_layers``/``kv_bytes_per_token_layer``
+    on every engine iteration.
+    """
+
+    def __init__(self, cfg: ModelConfig, bytes_per_el: int = 2):
+        self.cfg = cfg
+        self.bytes_per_el = bytes_per_el
+        self.n_active = active_param_count(cfg)
+        self.n_total = param_count(cfg)
+        self.attn_layers = attention_layers(cfg)
+        self.window = cfg.attention_window or 0
+        # flops = _flops_per_token * tokens + _attn_coeff * ctx-terms
+        self._flops_per_token = 2.0 * self.n_active
+        self._attn_coeff = 4.0 * (cfg.num_heads * cfg.head_dim) \
+            * self.attn_layers
+        # memory: weights stream once per iteration, KV traffic per token
+        self.kv_bytes_per_token = kv_bytes_per_token_layer(cfg, bytes_per_el) \
+            * self.attn_layers
+        self.weight_bytes = self.n_active * bytes_per_el
+        if cfg.arch_type == "ssm":
+            self._state_bytes_per_seq = (cfg.ssm_nheads * cfg.ssm_head_dim
+                                         * cfg.ssm_state * 4) * cfg.num_layers
+        elif cfg.arch_type == "hybrid":
+            self._state_bytes_per_seq = (cfg.lru_width * 4) * cfg.num_layers
+        else:
+            self._state_bytes_per_seq = 0
+
+    def iteration_cost(self, *, prefill_tokens: int, decode_seqs: int,
+                       avg_context: float, cached_prefill_tokens: int = 0):
+        """(flops, mem_bytes) for one continuous-batching iteration.
+
+        prefill_tokens: NEW prompt tokens processed this iteration
+        (prefix-cache hits excluded); decode_seqs: sequences generating one
+        token each; avg_context: mean KV length the decode tokens attend to.
+        """
+        tokens = prefill_tokens + decode_seqs
+        eff_ctx = min(avg_context, self.window) if self.window \
+            else avg_context
+        ctx = max(eff_ctx, 1.0)
+        # attention score/value FLOPs: 4 * d_attn * context per token per
+        # layer; prefill pays the causal triangle (factor 0.5)
+        flops = self._flops_per_token * tokens + self._attn_coeff * (
+            prefill_tokens * ctx * 0.5 + decode_seqs * ctx)
+        kv = self.kv_bytes_per_token
+        mem = self.weight_bytes                 # weight reads
+        mem += tokens * kv                      # cache writes
+        mem += decode_seqs * kv * ctx           # decode cache reads
+        mem += prefill_tokens * kv * 0.1        # prefill reread (flash)
+        if self._state_bytes_per_seq:           # ssm/recurrent state traffic
+            mem += decode_seqs * self._state_bytes_per_seq
+        return flops, mem
+
+
+@lru_cache(maxsize=256)
+def get_cost_model(cfg: ModelConfig, bytes_per_el: int = 2) -> CostModel:
+    """Shared ``CostModel`` per (config, dtype width) — configs are frozen
+    dataclasses, so caching on identity-of-value is safe."""
+    return CostModel(cfg, bytes_per_el)
+
+
 def iteration_cost(cfg: ModelConfig, *, prefill_tokens: int,
                    decode_seqs: int, avg_context: float,
                    cached_prefill_tokens: int = 0,
                    bytes_per_el: int = 2):
-    """(flops, mem_bytes) for one continuous-batching iteration.
-
-    prefill_tokens: NEW prompt tokens processed this iteration (prefix-cache
-    hits excluded); decode_seqs: sequences generating one token each;
-    avg_context: mean KV length the decode tokens attend to.
-    """
-    n_active = active_param_count(cfg)
-    n_total = param_count(cfg)
-    attn_l = attention_layers(cfg)
-    d_attn = cfg.num_heads * cfg.head_dim
-    window = cfg.attention_window or 0
-
-    tokens = prefill_tokens + decode_seqs
-    flops = 2.0 * n_active * tokens
-    # attention score/value FLOPs: 4 * d_attn * context per token per layer
-    eff_ctx = min(avg_context, window) if window else avg_context
-    flops += 4.0 * d_attn * attn_l * (
-        prefill_tokens * max(eff_ctx, 1.0) * 0.5    # causal triangle
-        + decode_seqs * max(eff_ctx, 1.0))
-
-    # memory: weights stream once per iteration (batched reuse), KV traffic
-    kv_l = kv_bytes_per_token_layer(cfg, bytes_per_el) * attn_l
-    mem = n_active * bytes_per_el                      # weight reads
-    mem += tokens * kv_l                               # cache writes
-    mem += decode_seqs * kv_l * max(eff_ctx, 1.0)      # decode cache reads
-    mem += prefill_tokens * kv_l * 0.1                 # prefill reread (flash)
-    # ssm state traffic
-    if cfg.arch_type in ("ssm", "hybrid"):
-        state = cfg.ssm_nheads * cfg.ssm_head_dim * cfg.ssm_state * 4 \
-            if cfg.arch_type == "ssm" else cfg.lru_width * 4
-        mem += decode_seqs * state * cfg.num_layers
-    del n_total
-    return flops, mem
+    """Functional API over the cached :class:`CostModel` (see there)."""
+    return get_cost_model(cfg, bytes_per_el).iteration_cost(
+        prefill_tokens=prefill_tokens, decode_seqs=decode_seqs,
+        avg_context=avg_context, cached_prefill_tokens=cached_prefill_tokens)

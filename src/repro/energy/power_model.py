@@ -104,24 +104,51 @@ TPU_V5E = HardwareSpec(
 
 
 class DVFSModel:
-    """Maps (work, frequency) -> (latency, energy) for one engine iteration."""
+    """Maps (work, frequency) -> (latency, energy) for one engine iteration.
+
+    The frequency-response terms (effective compute throughput with
+    top-of-curve saturation, bandwidth-knee factor, the f^alpha dynamic-power
+    term) depend only on the frequency, so they are tabulated once over the
+    hardware's native ``f_step`` grid at construction; off-grid frequencies
+    (clamped values, custom policies) fall back to computing and memoising
+    the same terms on first use. Cached values are produced by the exact
+    expressions the scalar path used, so latency/power are bit-identical.
+    """
 
     def __init__(self, spec: HardwareSpec):
         self.spec = spec
+        # f_mhz -> (comp_denominator, mem_denominator, fr**alpha)
+        self._freq_terms_cache: dict = {}
+        for f in spec.frequencies():
+            self._freq_terms(f)
+
+    def _freq_terms(self, f_mhz: float) -> Tuple[float, float, float]:
+        terms = self._freq_terms_cache.get(f_mhz)
+        if terms is None:
+            sp = self.spec
+            fr = min(max(f_mhz / sp.f_max, 1e-3), 1.0)
+            # effective compute throughput with top-of-curve saturation
+            if fr <= sp.perf_knee:
+                thr = fr
+            else:
+                thr = sp.perf_knee \
+                    + sp.perf_slope_above_knee * (fr - sp.perf_knee)
+            bw_factor = min(1.0, (fr / sp.bw_knee) ** sp.bw_beta)
+            terms = (sp.peak_flops * thr, sp.mem_bw * bw_factor,
+                     fr ** sp.alpha)
+            self._freq_terms_cache[f_mhz] = terms
+        return terms
 
     def iteration_time_power(self, flops: float, mem_bytes: float,
                              f_mhz: float) -> Tuple[float, float]:
         """Returns (seconds, watts) for one iteration of the given work."""
         sp = self.spec
-        fr = min(max(f_mhz / sp.f_max, 1e-3), 1.0)
-        # effective compute throughput with top-of-curve saturation
-        if fr <= sp.perf_knee:
-            thr = fr
-        else:
-            thr = sp.perf_knee + sp.perf_slope_above_knee * (fr - sp.perf_knee)
-        t_comp = flops / (sp.peak_flops * thr) if flops > 0 else 0.0
-        bw_factor = min(1.0, (fr / sp.bw_knee) ** sp.bw_beta)
-        t_mem = mem_bytes / (sp.mem_bw * bw_factor) if mem_bytes > 0 else 0.0
+        terms = self._freq_terms_cache.get(f_mhz)     # inlined hot path
+        if terms is None:
+            terms = self._freq_terms(f_mhz)
+        comp_denom, mem_denom, fr_alpha = terms
+        t_comp = flops / comp_denom if flops > 0 else 0.0
+        t_mem = mem_bytes / mem_denom if mem_bytes > 0 else 0.0
         # compute and memory pipelines overlap; overhead does not
         t_busy = max(t_comp, t_mem)
         t = t_busy + sp.iteration_overhead_s
@@ -133,7 +160,7 @@ class DVFSModel:
         # decode ~300 W vs prefill 280-325 W on A800) — power scales with
         # the clock cube, NOT with FLOP utilization.
         p = (sp.p_idle + sp.p_static_active * u_busy
-             + sp.p_dyn_compute * u_busy * fr ** sp.alpha
+             + sp.p_dyn_compute * u_busy * fr_alpha
              + sp.p_dyn_memory * u_mem)
         return t, p
 

@@ -104,7 +104,42 @@ class EventLoop:
         return True
 
     # ------------------------------------------------------------------
+    def _run_single(self) -> int:
+        """Single node, no fleet policy — the overwhelmingly common shape
+        (every benchmark cell): exactly one event is ever outstanding, so
+        the loop re-derives it inline instead of round-tripping the heap.
+        Trajectories, step counts, ``now`` and event counts are identical
+        to the general loop."""
+        node = self.nodes[0]
+        eng = node.engine
+        policy = node.policy
+        sched = eng.sched
+        t_end = self.t_end
+        counts = self.counts
+        self._heap.clear()               # constructor's seed event, inlined
+        while self.steps < self.max_iters:
+            if sched.waiting or sched.running:
+                kind = EventKind.ITERATION
+                t = eng.clock
+            elif eng._pending:
+                kind = EventKind.ARRIVAL
+                t = eng._pending[0][0]
+            else:
+                break                    # drained
+            if t > self.now:
+                self.now = t
+            if t_end is not None and eng.clock >= t_end:
+                break
+            eng.step()
+            if policy is not None:
+                policy.maybe_act(eng)
+            self.steps += 1
+            counts[kind] += 1
+        return self.steps
+
     def run(self) -> int:
+        if len(self.nodes) == 1 and self.fleet_policy is None:
+            return self._run_single()
         t_end = self.t_end
         while self._heap and self.steps < self.max_iters:
             t, _, kind, i = heapq.heappop(self._heap)

@@ -22,9 +22,7 @@ import heapq
 import itertools
 from typing import List, Optional, Tuple
 
-import numpy as np
-
-from repro.energy import A6000, DVFSModel, HardwareSpec, iteration_cost
+from repro.energy import A6000, CostModel, DVFSModel, HardwareSpec
 from repro.models.common import ModelConfig
 from repro.serving.driver import EngineNode, drive
 from repro.serving.kv_cache import PagedKVCache
@@ -38,42 +36,51 @@ from repro.serving.scheduler import BatchPlan, ContinuousBatchingScheduler
 # ---------------------------------------------------------------------------
 
 class SimBackend:
-    """Analytical backend: iteration cost -> DVFS model -> (dt, energy, W)."""
+    """Analytical backend: iteration cost -> DVFS model -> (dt, energy, W).
+
+    The per-iteration path is a few dozen scalar flops: config-derived cost
+    terms live in a precomputed :class:`repro.energy.CostModel`, frequency
+    response in the DVFS model's tabulated grid, and batch context means are
+    plain Python sums (numpy dispatch overhead dominates at batch size ~8).
+    """
 
     def __init__(self, cfg: ModelConfig, hardware: HardwareSpec = A6000):
         self.cfg = cfg
         self.dvfs = DVFSModel(hardware)
+        self.cost = CostModel(cfg)
+        self._shared_weight_bytes = 2.0 * self.cost.n_active
 
     def execute(self, plan: BatchPlan, f_mhz: float
                 ) -> Tuple[float, float, float]:
-        cfg = self.cfg
+        cost = self.cost
         flops = 0.0
         mem = 0.0
         if plan.prefill:
-            pf_ctx = float(np.mean([r.prefilled + n / 2
-                                    for r, n in plan.prefill]))
-            f1, m1 = iteration_cost(cfg, prefill_tokens=plan.prefill_tokens,
-                                    decode_seqs=0, avg_context=pf_ctx)
+            s = 0.0
+            tok = 0
+            for r, n in plan.prefill:
+                s += r.prefilled + n / 2
+                tok += n
+            f1, m1 = cost.iteration_cost(prefill_tokens=tok,
+                                         decode_seqs=0,
+                                         avg_context=s / len(plan.prefill))
             flops += f1
             mem += m1
         if plan.decode:
-            d_ctx = float(np.mean([r.context_len for r in plan.decode]))
-            f2, m2 = iteration_cost(cfg, prefill_tokens=0,
-                                    decode_seqs=plan.decode_seqs,
-                                    avg_context=d_ctx)
+            s = 0.0
+            for r in plan.decode:
+                s += r.prefilled + r.generated       # inlined context_len
+            f2, m2 = cost.iteration_cost(prefill_tokens=0,
+                                         decode_seqs=len(plan.decode),
+                                         avg_context=s / len(plan.decode))
             flops += f2
             # weight reads are shared between the prefill and decode halves
             # of a mixed iteration — don't double count them.
             if plan.prefill:
-                m2 -= 2.0 * _active_params(cfg)
+                m2 -= self._shared_weight_bytes
             mem += max(m2, 0.0)
         t, p = self.dvfs.iteration_time_power(flops, mem, f_mhz)
         return t, p * t, p
-
-
-def _active_params(cfg: ModelConfig) -> float:
-    from repro.energy import active_param_count
-    return active_param_count(cfg)
 
 
 class JaxBackend:
@@ -105,8 +112,13 @@ class JaxBackend:
         jnp = self._jnp
         t0 = time.perf_counter()
         if plan.prefill_tokens:
+            # bucket prefill lengths to powers of two (zero-pad): the jitted
+            # forward retraces per distinct shape, so without bucketing every
+            # novel prompt length recompiles; with it there are at most
+            # log2(64)+1 prefill traces per process.
             n = min(plan.prefill_tokens, 64)
-            toks = jnp.zeros((1, max(n, 1)), jnp.int32)
+            n = 1 << (max(n, 1) - 1).bit_length()
+            toks = jnp.zeros((1, n), jnp.int32)
             self._prefill(self.params, toks).block_until_ready()
         if plan.decode:
             b = self.max_batch
@@ -255,42 +267,59 @@ class InferenceEngine:
         """Execute one continuous-batching iteration at the current clock
         (the scheduler is expected to hold work; otherwise this is a
         blocked tick)."""
-        plan = self.sched.schedule(self.clock)
-        if plan.empty:
+        sched = self.sched
+        plan = sched.schedule(self.clock)
+        if not plan.prefill and not plan.decode:     # inlined plan.empty
             # blocked (e.g. out of KV blocks): try preemption, else idle-tick
-            if not self.sched._preempt_lowest_priority():
+            if not sched._preempt_lowest_priority():
                 return self._blocked_tick()
-            plan = self.sched.schedule(self.clock)
+            plan = sched.schedule(self.clock)
             if plan.empty:
                 return self._blocked_tick()
 
+        # prefix-cache credit must be read BEFORE completion advances
+        # ``prefilled`` (a request is on its first chunk exactly while
+        # prefilled == cached_tokens; evaluating afterwards never matches)
+        cached_tok = 0
+        for r, _n in plan.prefill:
+            if r.cached_tokens and r.prefilled == r.cached_tokens:
+                cached_tok += r.cached_tokens
+
         dt, energy, power = self.backend.execute(plan, self.frequency)
         self.clock += dt
-        finished = self.sched.complete_iteration(plan, self.clock)
-        self.finished.extend(finished)
+        finished = sched.complete_iteration(plan, self.clock)
+        if finished:
+            self.finished.extend(finished)
 
-        # metrics
+        # metrics (one pass over the prefill half; comparisons inline the
+        # Request properties — hot path)
+        prefill_tok = 0
+        gen_from_prefill = 0
+        for r, n in plan.prefill:
+            prefill_tok += n
+            if r.prefilled >= r.prompt_len:
+                gen_from_prefill += 1
         c = self.metrics.c
-        c.prompt_tokens_total += plan.prefill_tokens
-        c.cached_prompt_tokens_total += sum(
-            r.cached_tokens for r, _ in plan.prefill if r.prefilled
-            == r.cached_tokens)  # counted on first chunk
-        c.generation_tokens_total += plan.decode_seqs + sum(
-            1 for r, _ in plan.prefill if not r.is_prefilling)
+        c.prompt_tokens_total += prefill_tok
+        c.cached_prompt_tokens_total += cached_tok
+        c.generation_tokens_total += len(plan.decode) + gen_from_prefill
         c.iterations_total += 1
         c.requests_finished_total += len(finished)
         # TTFT is accounted when the scheduler assigns first_token_time —
         # not by replaying a float-equality check against the clock, which
-        # could silently drop samples.
-        for r in self.sched.pop_first_token_events():
-            c.ttft_seconds_total += r.first_token_time - r.arrival_time
-            c.ttft_count_total += 1
-        c.prefix_cache_hits_total = self.kv.stats.hits
-        c.prefix_cache_queries_total = self.kv.stats.queries
+        # could silently drop samples. (Guarded: the event list is empty on
+        # almost every iteration — skip the drain call + list churn.)
+        if sched._first_token_events:
+            for r in sched.pop_first_token_events():
+                c.ttft_seconds_total += r.first_token_time - r.arrival_time
+                c.ttft_count_total += 1
+        stats = self.kv.stats
+        c.prefix_cache_hits_total = stats.hits
+        c.prefix_cache_queries_total = stats.queries
         c.energy_joules_total += energy
         c.busy_seconds_total += dt
-        c.requests_running = self.sched.num_running()
-        c.requests_waiting = self.sched.num_waiting() + len(self._pending)
+        c.requests_running = len(sched.running)
+        c.requests_waiting = len(sched.waiting) + len(self._pending)
         c.gpu_cache_usage = self.kv.usage
         c.current_frequency_mhz = self.frequency
         c.current_power_watts = power

@@ -23,7 +23,7 @@ class RequestState(enum.Enum):
     FINISHED = "finished"
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class Request:
     arrival_time: float
     prompt_len: int                  # hidden from the tuner

@@ -129,18 +129,25 @@ class ContinuousBatchingScheduler:
         budget = self.max_batched_tokens
         decode: List[Request] = []
         prefill: List[Tuple[Request, int]] = []
-        # decodes first (latency-critical, one token each)
+        prefilling: List[Request] = []
+        # single pass over running: decodes admitted first (latency-critical,
+        # one token each, in running order while budget lasts); prefill
+        # candidates collected for the chunk pass below. The comparisons
+        # inline ``is_prefilling`` — this is the hottest loop in the engine.
         for req in self.running.values():
-            if not req.is_prefilling and budget > 0:
+            if req.prefilled < req.prompt_len:
+                prefilling.append(req)
+            elif budget > 0:
                 decode.append(req)
                 budget -= 1
         # then chunked prefill
-        for req in self.running.values():
-            if req.is_prefilling and budget > 0:
-                chunk = min(req.prefill_remaining, self.prefill_chunk, budget)
-                if chunk > 0:
-                    prefill.append((req, chunk))
-                    budget -= chunk
+        for req in prefilling:
+            if budget <= 0:
+                break
+            chunk = min(req.prompt_len - req.prefilled, self.prefill_chunk,
+                        budget)
+            prefill.append((req, chunk))
+            budget -= chunk
         return BatchPlan(prefill=prefill, decode=decode)
 
     # ------------------------------------------------------------------
@@ -160,18 +167,18 @@ class ContinuousBatchingScheduler:
         finished: List[Request] = []
         for req, chunk in plan.prefill:
             req.prefilled += chunk
-            if not req.is_prefilling:
+            if req.prefilled >= req.prompt_len:
                 # prompt done -> first output token is produced this iter
                 req.generated += 1
                 if req.first_token_time is None:
                     req.first_token_time = now
                     self._first_token_events.append(req)
                 self.kv.register_prefix(req)
-                if req.done:
+                if req.generated >= req.output_len:
                     finished.append(req)
         for req in plan.decode:
             req.generated += 1
-            if req.done:
+            if req.generated >= req.output_len:
                 finished.append(req)
         for req in finished:
             req.state = RequestState.FINISHED
