@@ -18,7 +18,7 @@ import json
 import os
 from typing import Dict, List
 
-from benchmarks.common import results_path, save_json
+from benchmarks.common import save_json
 from repro.configs import config_for_shape, get_shape
 from repro.energy import active_param_count
 

@@ -89,8 +89,10 @@ def _tab_fleet(quick):
     out = run(n_requests=300 if quick else 600, quiet=True)
     d = out["per_node_vs_global_pct"]
     g = out["global_vs_base_pct"]
+    m = out["policy_mix"]["tiered_vs_agft_all_by_length_pct"]
     return 0.0, (f"global_energy{g['energy_j']:+.1f}%;"
-                 f"pernode_vs_global_edp{d['edp']:+.1f}%")
+                 f"pernode_vs_global_edp{d['edp']:+.1f}%;"
+                 f"tiered_mix_ttft{m['ttft_s']:+.1f}%")
 
 
 def _roofline(quick):
@@ -171,6 +173,25 @@ def _tab6_reduce(results, quick):
     return 0.0, f"max_abs_dev={out['max_abs_deviation_pct']:.1f}%", out
 
 
+def _powercap_units(quick, deps):
+    from benchmarks import tab_powercap
+    return [(tab_powercap._cell, (a,))
+            for a in tab_powercap.unit_args(200 if quick else 400)]
+
+
+def _powercap_reduce(results, quick):
+    from benchmarks import tab_powercap
+    out = tab_powercap._assemble(results, quiet=True)
+    h = out["headline"]
+    if not h:
+        return 0.0, "no_binding_budget", out
+    derived = (f"@{h['budget']}:"
+               f"pernode_viol{h['pernode_violation_s']:.0f}s;"
+               f"hier_viol{h['hierarchy_violation_s']:.0f}s;"
+               f"hier_vs_uniform_edp{h['edp_vs_uniform_pct']:+.1f}%")
+    return 0.0, derived, out
+
+
 GRID = [
     ("fig5_workload_profiles", _mono(_fig5)),
     ("fig6_freq_sweep_optima", {"units": _fig6_units,
@@ -185,6 +206,8 @@ GRID = [
                                 "reduce": _tab6_reduce,
                                 "deps": ("fig6_freq_sweep_optima",)}),
     ("tab_fleet_global_vs_pernode", _mono(_tab_fleet)),
+    ("tab_powercap_hierarchy", {"units": _powercap_units,
+                                "reduce": _powercap_reduce}),
     ("roofline_terms", _mono(_roofline)),
 ]
 

@@ -7,7 +7,6 @@ quantifies how much actuation churn the penalty removes and what it costs
 in EDP."""
 from __future__ import annotations
 
-import dataclasses
 
 import numpy as np
 

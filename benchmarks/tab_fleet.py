@@ -12,16 +12,26 @@ closed loops buy over cross-node coordination — the quantity the ROADMAP
 asks for. A length-segregating router widens it (nodes see different
 phase mixes and want different frequencies); the default least-loaded
 router narrows it (homogeneous traffic -> one frequency is near-optimal).
+
+The ``policy_mix`` grid (ROADMAP heterogeneity item) crosses the two
+routers with per-node policy assignments: all-AGFT, all-SLO, and the
+tiered mix — AGFT on the batch tier (the first half of the fleet, which
+``route_by_length`` feeds long-context traffic) where EDP is the right
+objective, the SLO latency controller on the latency tier (chat traffic)
+where responsiveness is. Tiering only means something to the segregating
+router; under least-loaded routing every node sees the same mix and the
+assignment degenerates to a sanity check.
 """
 from __future__ import annotations
 
-from typing import Dict
+from typing import Dict, List, Optional
 
 import numpy as np
 
 from benchmarks.common import PAPER_MODEL, save_json
 from repro.configs import get_config
-from repro.serving.cluster import ServingCluster, route_by_length
+from repro.serving.cluster import (ServingCluster, route_by_length,
+                                   route_least_loaded)
 from repro.workloads import PROTOTYPES, generate_requests
 
 
@@ -34,11 +44,12 @@ def _trace(n: int, seed: int):
                                 base_rate=1.5, seed=seed + 1))
 
 
-def _serve(n_nodes, n_requests, seed, *, policies=None, fleet=None) -> Dict:
+def _serve(n_nodes, n_requests, seed, *, policies=None, fleet=None,
+           router=route_by_length) -> Dict:
     cfg = get_config(PAPER_MODEL)
     cl = ServingCluster(cfg, n_nodes=n_nodes, with_tuners=False,
                         policies=policies, fleet_policy=fleet,
-                        router=route_by_length)
+                        router=router)
     cl.submit(_trace(n_requests, seed))
     steps = cl.drain()
     s = cl.summary()
@@ -53,6 +64,61 @@ def _serve(n_nodes, n_requests, seed, *, policies=None, fleet=None) -> Dict:
                             - min(s.node_frequencies)),
         "engine_steps": steps,
     }
+
+
+ROUTERS = {"least_loaded": route_least_loaded,
+           "by_length": route_by_length}
+
+
+def _mixes(n_nodes: int) -> Dict[str, List[Optional[str]]]:
+    half = max(n_nodes // 2, 1)
+    return {
+        "agft-all": ["agft"] * n_nodes,
+        "slo-all": ["slo"] * n_nodes,
+        # batch tier (route_by_length's long-context half) optimizes EDP,
+        # latency tier holds its TPOT budget
+        "agft-batch/slo-latency": (["agft"] * half
+                                   + ["slo"] * (n_nodes - half)),
+    }
+
+
+def run_policy_mix(n_requests: int = 600, n_nodes: int = 4, seed: int = 11,
+                   quiet: bool = False,
+                   precomputed: Optional[Dict[str, Dict]] = None) -> Dict:
+    """Router x policy-mix grid (the ROADMAP's open heterogeneity item).
+
+    ``precomputed`` maps grid keys to already-served rows (the simulation
+    is deterministic, so ``run()`` hands in its per-node-AGFT cell instead
+    of re-simulating it)."""
+    grid: Dict[str, Dict] = {}
+    for rname, router in ROUTERS.items():
+        for mname, mix in _mixes(n_nodes).items():
+            key = f"{rname}|{mname}"
+            if precomputed and key in precomputed:
+                row = dict(precomputed[key])
+            else:
+                row = _serve(n_nodes, n_requests, seed, policies=mix,
+                             router=router)
+            row["router"] = rname
+            row["mix"] = mname
+            grid[key] = row
+    # what tiering buys where it should: segregated traffic, mixed policies
+    tiered = grid["by_length|agft-batch/slo-latency"]
+    agft_all = grid["by_length|agft-all"]
+    summary = {
+        k: 100 * (tiered[k] / agft_all[k] - 1)
+        for k in ("energy_j", "edp", "ttft_s", "tpot_s")}
+    out = {"grid": grid, "tiered_vs_agft_all_by_length_pct": summary}
+    if not quiet:
+        for key, r in grid.items():
+            fr = np.array(r["node_frequencies"])
+            print(f"{key:32s} energy {r['energy_j']/1e3:8.1f} kJ  "
+                  f"edp {r['edp']:8.1f}  tpot {r['tpot_s']*1e3:6.2f} ms  "
+                  f"ttft {r['ttft_s']:5.2f} s  "
+                  f"f=[{fr.min():.0f}..{fr.max():.0f}] MHz")
+        print(f"tiered vs agft-all (by_length): "
+              f"edp {summary['edp']:+.1f}%  ttft {summary['ttft_s']:+.1f}%")
+    return out
 
 
 def run(n_requests: int = 600, n_nodes: int = 4, seed: int = 11,
@@ -75,6 +141,9 @@ def run(n_requests: int = 600, n_nodes: int = 4, seed: int = 11,
             k: 100 * (pern[k] / glob[k] - 1)
             for k in ("energy_j", "edp", "ttft_s", "tpot_s")},
     }
+    out["policy_mix"] = run_policy_mix(
+        n_requests, n_nodes, seed, quiet=quiet,
+        precomputed={"by_length|agft-all": pern})
     save_json("tab_fleet.json", out)
     if not quiet:
         for name in ("fmax", "global", "per_node"):

@@ -18,11 +18,19 @@ refinement frameworks work unchanged.
 Arm order is deterministic: always ascending frequency, regardless of
 ``rebuild``/``remove`` history, so tie-breaks and Thompson's RNG-draw-to-arm
 pairing never depend on action-space mutation order.
+
+Frequency bands (hierarchical fleet control): ``set_band(f_lo, f_hi)``
+restricts *selection* to arms inside ``[f_lo, f_hi]`` via a reversible
+boolean mask over the stack — statistics are never destroyed, so a band
+that widens on a later FLEET_TICK instantly re-legalizes the arms it had
+masked. At least one arm is always legal (the nearest to the band's
+midpoint when the band contains none), and with no band set every
+selection path is byte-for-byte the unmasked code.
 """
 from __future__ import annotations
 
 from collections.abc import Mapping
-from typing import Dict, Iterator, List, Optional, Sequence
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -192,6 +200,8 @@ class LinUCBBank:
         self.ridge = ridge
         self.rng = np.random.default_rng(seed)
         self.arms = _ArmMap(self)
+        self._band: Optional[Tuple[float, float]] = None
+        self._legal: Optional[np.ndarray] = None   # bool mask; None = all
         self._alloc(sorted({float(f) for f in frequencies}))
 
     # -- storage -------------------------------------------------------
@@ -207,6 +217,7 @@ class LinUCBBank:
         self._n = np.zeros(n, dtype=np.int64)
         self._reward_sum = np.zeros(n)
         self._edp_sum = np.zeros(n)
+        self._apply_band()
 
     def _drop_rows(self, keep: np.ndarray) -> None:
         self._f = [f for f, k in zip(self._f, keep) if k]
@@ -218,6 +229,61 @@ class LinUCBBank:
         self._n = self._n[keep]
         self._reward_sum = self._reward_sum[keep]
         self._edp_sum = self._edp_sum[keep]
+        self._apply_band()
+
+    # -- frequency band (hierarchical fleet control) -------------------
+    @property
+    def band(self) -> Optional[Tuple[float, float]]:
+        return self._band
+
+    def set_band(self, f_lo: float, f_hi: float) -> None:
+        """Restrict selection to arms inside ``[f_lo, f_hi]`` (inclusive,
+        inverted bounds tolerated). Reversible — statistics survive; the
+        mask is recomputed on every action-space mutation."""
+        lo, hi = (float(f_lo), float(f_hi))
+        if lo > hi:
+            lo, hi = hi, lo
+        self._band = (lo, hi)
+        self._apply_band()
+
+    def clear_band(self) -> None:
+        self._band = None
+        self._legal = None
+
+    def _apply_band(self) -> None:
+        """Recompute the legal-arm mask; a band that contains no arm (e.g.
+        narrower than the grid step) legalizes the single arm nearest to
+        its midpoint so the bandit always has an action."""
+        if self._band is None:
+            self._legal = None
+            return
+        lo, hi = self._band
+        f = np.asarray(self._f)
+        legal = (f >= lo - 1e-9) & (f <= hi + 1e-9)
+        if not legal.any() and len(f):
+            legal[int(np.argmin(np.abs(f - (lo + hi) / 2.0)))] = True
+        self._legal = legal
+
+    def is_legal(self, f: float) -> bool:
+        return (self._legal is None
+                or bool(self._legal[self._index[float(f)]]))
+
+    def n_legal(self) -> int:
+        return (len(self._f) if self._legal is None
+                else int(self._legal.sum()))
+
+    def legal_frequencies(self) -> List[float]:
+        if self._legal is None:
+            return list(self._f)
+        return [f for f, ok in zip(self._f, self._legal) if ok]
+
+    def _argmax_legal(self, scores: np.ndarray) -> float:
+        """Highest-scoring legal arm; ties break to the lowest frequency
+        (subsetting preserves ascending order)."""
+        if self._legal is None:
+            return self._f[int(np.argmax(scores))]
+        idx = np.flatnonzero(self._legal)
+        return self._f[int(idx[int(np.argmax(scores[idx]))])]
 
     # ------------------------------------------------------------------
     @property
@@ -314,6 +380,8 @@ class LinUCBBank:
         # untried arms first (infinite-bonus convention), lowest-f first so
         # exploration sweeps upward through the cheap range
         untried = self._n == 0
+        if self._legal is not None:
+            untried = untried & self._legal
         if untried.any():
             return self._f[int(np.argmax(untried))]
         return self.argmax_ucb(x, alpha)
@@ -322,7 +390,7 @@ class LinUCBBank:
         """Highest-UCB arm, ignoring the untried-arm convention (used by
         predictive refinement to pick its anchor). Ties break to the lowest
         frequency."""
-        return self._f[int(np.argmax(self._scores_ucb(x, alpha)))]
+        return self._argmax_legal(self._scores_ucb(x, alpha))
 
     def select_thompson(self, x: np.ndarray, nu: float = 0.3) -> float:
         """Linear Thompson sampling over the arm set: one batched Cholesky
@@ -341,13 +409,15 @@ class LinUCBBank:
                     L[i] = np.eye(d)
         z = self.rng.standard_normal((n, d))
         theta_s = self._theta + nu * np.einsum("aij,aj->ai", L, z)
-        return self._f[int(np.argmax(theta_s @ x))]
+        return self._argmax_legal(theta_s @ x)
 
     def select_greedy(self, x: np.ndarray) -> float:
-        return self._f[int(np.argmax(self._theta @ x))]
+        return self._argmax_legal(self._theta @ x)
 
     def best_historical(self, min_samples: int = 1) -> Optional[float]:
         mask = self._n >= min_samples
+        if self._legal is not None:
+            mask = mask & self._legal
         if not mask.any():
             return None
         mean_edp = np.full(len(self._f), np.inf)

@@ -11,6 +11,12 @@ concentrates on viable regions.
 3. Cascade pruning — physical heuristic: when a pruned frequency lies below
    half of f_max, every lower frequency is pruned with it (if a moderate
    clock already can't keep up, slower clocks certainly can't).
+
+Under a fleet-assigned frequency band (``LinUCBBank.set_band``, see
+``repro.policies.hierarchy``) pruning additionally never removes the last
+band-legal arm: pruning is permanent, the band is not, so destroying the
+only in-band action would leave the coordinator nothing to govern. With no
+band set every arm is legal and the guard is inert.
 """
 from __future__ import annotations
 
@@ -49,6 +55,8 @@ class PruningFramework:
     # ------------------------------------------------------------------
     def _prune(self, bank: LinUCBBank, f: float, mechanism: str,
                round_idx: int) -> None:
+        if bank.is_legal(f) and bank.n_legal() <= 1:
+            return                    # never orphan the band (see module doc)
         bank.remove(f)
         self.permanently_pruned.add(f)
         self.log.append({"round": round_idx, "freq": f,

@@ -8,6 +8,15 @@ Periodically re-centers a fine-grained action space (anchor +/- 150 MHz at
 * Predictive refinement (t >= t_mature): anchor = argmax LinUCB UCB score
   for the CURRENT context x_t — trust the mature model, focus exploration
   where it predicts the highest reward.
+
+Under a fleet-assigned frequency band (``repro.policies.hierarchy``) the
+anchor is already band-restricted (both ``best_historical`` and
+``argmax_ucb`` select among legal arms only) and the candidate grid is
+clipped to the band before rebuilding — refinement concentrates arms
+where the coordinator allows the node to act instead of spending them on
+frequencies the mask would immediately veto. A band too narrow to hold 3
+grid points skips refinement (the bank's nearest-arm guarantee keeps at
+least one action legal).
 """
 from __future__ import annotations
 
@@ -62,6 +71,10 @@ class MixedMaturityRefinement:
             anchor = bank.argmax_ucb(x_t, self.ucb_alpha)
             mode = "predictive"
         grid = pruner.filter_candidates(self._candidate_grid(anchor))
+        band = getattr(bank, "band", None)
+        if band is not None:
+            grid = [f for f in grid
+                    if band[0] - 1e-9 <= f <= band[1] + 1e-9]
         if len(grid) < 3:
             return None
         bank.rebuild(grid, warm_from=anchor)

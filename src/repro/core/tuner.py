@@ -86,7 +86,25 @@ class AGFTTuner:
         self.prev_context: Optional[np.ndarray] = None
         self.prev_switched = False    # did actuating prev_action change f?
         self.switch_count = 0         # actual DVFS transitions actuated
+        self.band: Optional[tuple] = None   # fleet-assigned [f_lo, f_hi]
         self.history: List[dict] = []
+
+    # ------------------------------------------------------------------
+    def set_band(self, f_lo: float, f_hi: float) -> None:
+        """Fleet-coordinator hook (hierarchical power capping): restrict
+        the action space to ``[f_lo, f_hi]`` by masking LinUCB arms outside
+        the band. Inverted bounds are tolerated (swapped), the band is
+        clamped to the hardware envelope, and masking is reversible — a
+        later, wider band re-legalizes the arms with their learned
+        statistics intact. With no band set, decisions are bit-identical
+        to the uncoordinated tuner."""
+        lo, hi = (float(f_lo), float(f_hi))
+        if lo > hi:
+            lo, hi = hi, lo
+        lo = min(max(lo, self.hw.f_min), self.hw.f_max)
+        hi = min(max(hi, self.hw.f_min), self.hw.f_max)
+        self.band = (lo, hi)
+        self.bank.set_band(lo, hi)
 
     # ------------------------------------------------------------------
     @property
@@ -175,4 +193,5 @@ class AGFTTuner:
             "phase": phase or "warmup",
             "n_arms": len(self.bank.arms),
             "converged": self.convergence.converged,
+            "band": self.band,
         })

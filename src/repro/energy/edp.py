@@ -16,7 +16,7 @@ EXPERIMENTS.md §Repro).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict
 
 
 @dataclasses.dataclass(frozen=True)

@@ -4,7 +4,7 @@ kernel sweep tests assert against, and the execution path used on CPU
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

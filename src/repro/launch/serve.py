@@ -9,6 +9,11 @@ cluster — under a workload with any registered power policy (or none).
       --frequency 1200
   python -m repro.launch.serve --nodes 4 --policy agft       # per-node loops
   python -m repro.launch.serve --nodes 4 --fleet-policy global   # one global
+  # hierarchical power capping: the coordinator water-fills an 800 W
+  # cluster budget into per-node frequency bands on FLEET_TICK while
+  # per-node AGFT loops fine-tune inside them
+  python -m repro.launch.serve --nodes 4 --fleet-policy hierarchy \
+      --power-cap-w 800 --policy agft
 """
 from __future__ import annotations
 
@@ -83,34 +88,61 @@ def _generate(args):
                              base_rate=args.rate, seed=args.seed)
 
 
+def _node_policies(args, hw):
+    if args.policy == "none":
+        return [None] * args.nodes
+    kw = ({"frequency_mhz": args.frequency}
+          if args.policy in ("static", "oracle") and args.frequency
+          else {})
+    return [get_policy(args.policy, hardware=hw, **kw)
+            for _ in range(args.nodes)]
+
+
 def _serve_cluster(args) -> dict:
-    """N-node fleet: per-node copies of --policy, or one --fleet-policy
-    controller for the whole cluster."""
+    """N-node fleet: per-node copies of --policy, one --fleet-policy
+    controller for the whole cluster, or BOTH for hierarchical control
+    (a band coordinator on FLEET_TICK + node-local loops inside the
+    bands)."""
     hw = HARDWARE[args.hardware]
-    policies = None
-    if args.fleet_policy == "none":
-        if args.policy != "none":
-            kw = ({"frequency_mhz": args.frequency}
-                  if args.policy in ("static", "oracle") and args.frequency
-                  else {})
-            policies = [get_policy(args.policy, hardware=hw, **kw)
-                        for _ in range(args.nodes)]
-        else:
-            policies = [None] * args.nodes
+    fleet = None
+    if args.fleet_policy != "none":
+        try:
+            fleet = get_policy(args.fleet_policy, hardware=hw,
+                               **({"power_cap_w": args.power_cap_w}
+                                  if args.power_cap_w else {}))
+        except TypeError:
+            # controller without a cap parameter (e.g. "global"): attach
+            # the cap as a metering-only attribute — the event loop still
+            # accounts violations against it
+            fleet = get_policy(args.fleet_policy, hardware=hw)
+            fleet.power_cap_w = args.power_cap_w
+    if fleet is None:
+        policies = _node_policies(args, hw)
+    elif getattr(fleet, "coordinates_bands", False):
+        # hierarchical: node loops fine-tune inside the coordinator's
+        # bands (default to the paper's per-node AGFT)
+        if args.policy == "none":
+            args.policy = "agft"
+        policies = _node_policies(args, hw)
+    elif getattr(fleet, "observe_only", False):
+        # metering-only fleet policy: per-node --policy stays in charge
+        policies = _node_policies(args, hw)
+    else:
+        policies = None     # single-frequency controllers actuate alone
     cl = ServingCluster(get_config(args.arch), n_nodes=args.nodes,
-                        hardware=hw, policies=policies,
-                        fleet_policy=(None if args.fleet_policy == "none"
-                                      else args.fleet_policy))
+                        hardware=hw, policies=policies, fleet_policy=fleet)
     if args.policy == "none" and args.frequency:
         for e in cl.engines:
             e.set_frequency(args.frequency)
     cl.submit(_generate(args))
     steps = cl.drain()
     s = cl.summary()
-    return {
+    out = {
         "nodes": args.nodes,
         "fleet_policy": args.fleet_policy,
-        "policy": args.policy if args.fleet_policy == "none" else None,
+        "policy": (args.policy if fleet is None
+                   or getattr(fleet, "coordinates_bands", False)
+                   or getattr(fleet, "observe_only", False) else None),
         "finished": s.finished,
         "energy_j": s.energy_j,
         "ttft_s": s.mean_ttft_s,
@@ -120,6 +152,13 @@ def _serve_cluster(args) -> dict:
         "node_energy_j": s.node_energy_j,
         "engine_steps": steps,
     }
+    if s.power_cap_w is not None:
+        out["power_cap_w"] = s.power_cap_w
+        out["cap_violation_s"] = s.cap_violation_s
+        out["metered_s"] = s.metered_s
+        out["mean_fleet_power_w"] = s.mean_fleet_power_w
+        out["peak_fleet_power_w"] = s.peak_fleet_power_w
+    return out
 
 
 def main():
@@ -134,22 +173,26 @@ def main():
                     help="azure trace duration (sim seconds)")
     ap.add_argument("--rate", type=float, default=3.0)
     ap.add_argument("--policy", "--tuner", dest="policy", default="agft",
-                    choices=available_policies() + ["none"])
+                    choices=available_policies(scope="node") + ["none"])
     ap.add_argument("--frequency", type=float, default=0.0,
                     help="fixed frequency for --policy none/static "
                          "(0 = f_max / the static default)")
     ap.add_argument("--nodes", type=int, default=1,
                     help="serve through an N-node ServingCluster")
     ap.add_argument("--fleet-policy", default="none",
-                    help="fleet-scope controller (e.g. 'global'); implies "
-                         "cluster mode and overrides per-node --policy")
+                    choices=available_policies(scope="fleet") + ["none"],
+                    help="fleet-scope controller: 'global' (one frequency "
+                         "for all nodes, overrides per-node --policy) or "
+                         "'hierarchy' (per-node bands; --policy keeps "
+                         "running inside them)")
+    ap.add_argument("--power-cap-w", type=float, default=0.0,
+                    help="cluster power budget in watts for --fleet-policy "
+                         "hierarchy/hierarchy-uniform (0 = uncapped); with "
+                         "other fleet policies it only meters violations")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="")
     args = ap.parse_args()
 
-    if args.policy == "global":
-        ap.error("'global' is fleet-scope: use --fleet-policy global "
-                 "--nodes N")
     if args.fleet_policy != "none" and args.nodes < 2:
         ap.error("--fleet-policy needs --nodes >= 2")
     if args.nodes > 1:

@@ -9,7 +9,6 @@ for 48-layer multi-billion-parameter configs.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Optional, Tuple
 
 import jax

@@ -7,7 +7,7 @@ cache, which is what makes the ``long_500k`` shape native for this family.
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp

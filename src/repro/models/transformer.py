@@ -12,7 +12,7 @@ Model contract (shared by every family in the zoo):
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp

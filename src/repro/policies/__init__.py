@@ -29,6 +29,16 @@ Built-in registry entries
                     policy (default agft) driven by fleet-aggregated
                     telemetry — attach via ``ServingCluster(...,
                     fleet_policy="global")`` (see ``repro.policies.fleet``)
+``hierarchy``       FLEET scope: power-cap coordinator — water-fills a
+                    cluster power budget (``power_cap_w``) into per-node
+                    frequency bands on FLEET_TICK while node-local
+                    policies fine-tune inside them via the optional
+                    ``set_band`` hook (see ``repro.policies.hierarchy``)
+``hierarchy-uniform``  FLEET scope: the capped single-frequency
+                    comparator (``hierarchy`` with ``uniform=True``)
+``fleet-meter``     FLEET scope: observe-only carrier of ``power_cap_w``
+                    so uncoordinated runs are metered for cap violations
+                    under the same event-loop meter as the hierarchy
 
 Registering a new policy
 ------------------------
@@ -62,10 +72,13 @@ from repro.policies.rules import OndemandPolicy, SLOAwareLatencyPolicy
 from repro.policies.agft import make_agft, make_agft_switchcost
 from repro.policies.fleet import (FleetPolicy, FleetTelemetryView,
                                   GlobalFrequencyPolicy)
+from repro.policies.hierarchy import (BandCoordinator, FleetPowerMeter,
+                                      full_busy_power_w, waterfill)
 
 __all__ = ["PowerPolicy", "WindowedPolicy", "TelemetryRecorder",
            "available_policies", "get_policy", "register_policy",
            "StaticPolicy", "OracleFixedPolicy", "OndemandPolicy",
            "SLOAwareLatencyPolicy", "make_agft", "make_agft_switchcost",
            "snap_to_grid", "FleetPolicy", "FleetTelemetryView",
-           "GlobalFrequencyPolicy"]
+           "GlobalFrequencyPolicy", "BandCoordinator", "FleetPowerMeter",
+           "full_busy_power_w", "waterfill"]

@@ -1,10 +1,12 @@
 """Registry entries for the paper's tuner: AGFT *is* a PowerPolicy.
 
 ``AGFTTuner`` already conforms structurally (``maybe_act(engine) ->
-Optional[float]``, telemetry via the shared ``TelemetryMonitor``); this
-module only adapts its constructor signature to the registry's
-``(hardware, **kwargs)`` convention, plus the switching-cost-aware
-ablation variant.
+Optional[float]``, telemetry via the shared ``TelemetryMonitor``, and the
+optional band hook ``set_band(f_lo, f_hi)`` — implemented by masking
+LinUCB arms outside the fleet-assigned band, see
+``repro.policies.hierarchy``); this module only adapts its constructor
+signature to the registry's ``(hardware, **kwargs)`` convention, plus the
+switching-cost-aware ablation variant.
 """
 from __future__ import annotations
 

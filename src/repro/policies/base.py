@@ -12,10 +12,18 @@ default — one controller per engine, invoked on iteration-complete
 events) or ``"fleet"`` (one controller for a whole cluster, invoked on
 FLEET_TICK events with aggregated telemetry; see
 ``repro.policies.fleet``).
+
+Node policies may additionally implement the OPTIONAL band hook
+``set_band(f_lo, f_hi)``: a fleet coordinator (``repro.policies.
+hierarchy``) assigns each node a frequency band on FLEET_TICK and the
+node-local loop fine-tunes inside it. ``WindowedPolicy`` implements it by
+clamping every decision into the band; AGFT masks its LinUCB arms
+instead. Policies without the hook simply aren't band-governed (the
+event loop still clamps the engine's frequency into the band).
 """
 from __future__ import annotations
 
-from typing import List, Optional, Protocol, runtime_checkable
+from typing import List, Optional, Protocol, Tuple, runtime_checkable
 
 from repro.core.monitor import TelemetryMonitor
 from repro.energy.edp import WindowStats
@@ -25,7 +33,13 @@ from repro.policies.registry import register_policy
 
 @runtime_checkable
 class PowerPolicy(Protocol):
-    """Structural interface every frequency controller implements."""
+    """Structural interface every frequency controller implements.
+
+    ``set_band(f_lo, f_hi)`` is an OPTIONAL extra hook (deliberately not a
+    protocol member — ``runtime_checkable`` would demand it of every
+    implementation): policies that have it are band-governable by a fleet
+    coordinator; the event loop feature-detects it with ``getattr``.
+    """
 
     def maybe_act(self, engine) -> Optional[float]:
         """Observe the engine (aggregate metrics only) and optionally set
@@ -43,7 +57,8 @@ class WindowedPolicy:
     benchmarks can treat all policies uniformly.
 
     Subclasses implement ``decide(window, engine) -> Optional[float]``;
-    the returned frequency is clamped to the hardware envelope and actuated.
+    the returned frequency is clamped to the hardware envelope — and into
+    the fleet-assigned band, when a coordinator has set one — and actuated.
     """
 
     #: label recorded in history rows; subclasses override
@@ -55,9 +70,21 @@ class WindowedPolicy:
                  sampling_period_s: float = 0.8):
         self.hw = hardware
         self.monitor = TelemetryMonitor(sampling_period_s)
+        self.band: Optional[Tuple[float, float]] = None
         self.history: List[dict] = []
 
     # ------------------------------------------------------------------
+    def set_band(self, f_lo: float, f_hi: float) -> None:
+        """Fleet-coordinator hook: clamp every subsequent decision into
+        ``[f_lo, f_hi]`` (inverted bounds tolerated, clamped to the
+        hardware envelope)."""
+        lo, hi = (float(f_lo), float(f_hi))
+        if lo > hi:
+            lo, hi = hi, lo
+        lo = min(max(lo, self.hw.f_min), self.hw.f_max)
+        hi = min(max(hi, self.hw.f_min), self.hw.f_max)
+        self.band = (lo, hi)
+
     def maybe_act(self, engine) -> Optional[float]:
         if not self.monitor.due(engine):
             return None
@@ -65,6 +92,8 @@ class WindowedPolicy:
         f = self.decide(window, engine)
         if f is not None:
             f = float(min(max(f, self.hw.f_min), self.hw.f_max))
+            if self.band is not None:
+                f = float(min(max(f, self.band[0]), self.band[1]))
             engine.set_frequency(f)
         self._record(engine, f, window)
         return f

@@ -88,8 +88,16 @@ class OracleFixedPolicy(StaticPolicy):
                                 decode_seqs=0,
                                 avg_context=self.prefill_chunk / 2)
         flops, mem = fd + fp, md + mp
+        # under a fleet-assigned band, sweep inside it: the in-band EDP
+        # optimum generally differs from the unconstrained optimum clamped
+        # to the band edge (a grid-free band falls back to the base clamp)
+        grid = self.hw.frequencies()
+        if self.band is not None:
+            in_band = [f for f in grid
+                       if self.band[0] - 1e-9 <= f <= self.band[1] + 1e-9]
+            grid = in_band or grid
         best_f, best_edp = self.hw.f_max, float("inf")
-        for f in self.hw.frequencies():
+        for f in grid:
             t, p = dvfs.iteration_time_power(flops, mem, f)
             edp = p * t * t
             if edp < best_edp:

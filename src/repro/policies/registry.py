@@ -3,10 +3,17 @@
 Factories take ``(hardware, **kwargs)`` and return a ``PowerPolicy``.
 Registering a class works because classes are callable with that
 signature; any callable does.
+
+Entries carry a *scope* — ``"node"`` (default; one controller per
+engine) or ``"fleet"`` (one controller per cluster, e.g. ``global`` and
+``hierarchy``; see ``repro.policies.fleet`` / ``repro.policies.
+hierarchy``). The scope is read off the registered factory (class
+attribute) so CLIs can offer only the names valid for their attachment
+point: ``available_policies(scope="node")``.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, List
+from typing import Callable, Dict, List, Optional
 
 from repro.energy.power_model import A6000, HardwareSpec
 
@@ -29,6 +36,7 @@ def get_policy(name: str, hardware: HardwareSpec = A6000, **kwargs):
 
     >>> get_policy("agft")          # paper tuner, default config
     >>> get_policy("static", frequency_mhz=1200.0)
+    >>> get_policy("hierarchy", power_cap_w=800.0)   # fleet scope
     """
     key = name.lower()
     if key not in _REGISTRY:
@@ -37,5 +45,13 @@ def get_policy(name: str, hardware: HardwareSpec = A6000, **kwargs):
     return _REGISTRY[key](hardware, **kwargs)
 
 
-def available_policies() -> List[str]:
-    return sorted(_REGISTRY)
+def policy_scope(name: str) -> str:
+    """Declared scope of a registered entry ("node" unless the factory
+    says otherwise) without constructing it."""
+    return getattr(_REGISTRY[name.lower()], "scope", "node")
+
+
+def available_policies(scope: Optional[str] = None) -> List[str]:
+    """Sorted registry names, optionally filtered to one scope."""
+    return sorted(n for n in _REGISTRY
+                  if scope is None or policy_scope(n) == scope)

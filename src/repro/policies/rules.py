@@ -7,6 +7,12 @@ utilization, blind to the serving phase mix), ``slo`` is a GreenLLM-style
 (arXiv:2508.16449) TPOT-budget controller — minimize frequency subject to
 a latency budget, with AIMD dynamics (additive down-steps while the budget
 has headroom, multiplicative recovery on violation).
+
+Both are band-governable (``WindowedPolicy.set_band``): under a
+hierarchical power-cap coordinator their decisions — including ondemand's
+jump-to-f_max and the SLO controller's multiplicative boost — are clamped
+into the fleet-assigned ``[f_lo, f_hi]``; the band's upper edge wins over
+latency recovery because the cap is a hard datacenter constraint.
 """
 from __future__ import annotations
 

@@ -18,6 +18,14 @@ one controller (e.g. ``"global"``) sampling fleet-aggregated telemetry on
 FLEET_TICK events and setting a single frequency for every node — the
 comparison that quantifies what the per-node closed loops buy
 (``benchmarks.tab_fleet``).
+
+Hierarchical control passes BOTH: ``fleet_policy=get_policy("hierarchy",
+power_cap_w=...)`` plus per-node ``policies=["agft", ...]`` — the
+coordinator water-fills the power budget into per-node frequency bands on
+FLEET_TICK and the node loops fine-tune inside them (``repro.policies.
+hierarchy``). When the fleet policy declares ``power_cap_w``, the event
+loop meters the fleet draw and ``summary()`` reports the budget
+accounting (``cap_violation_s``, mean/peak fleet watts).
 """
 from __future__ import annotations
 
@@ -30,7 +38,7 @@ from repro.core import AGFTConfig
 from repro.energy import A6000, HardwareSpec
 from repro.models.common import ModelConfig
 from repro.policies import get_policy
-from repro.serving.driver import EngineNode, drive
+from repro.serving.driver import EngineNode, EventLoop
 from repro.serving.engine import EngineConfig, InferenceEngine
 from repro.serving.request import Request
 
@@ -69,6 +77,13 @@ class ClusterSummary:
     edp: float
     node_frequencies: List[float]
     node_energy_j: List[float]
+    # power-budget accounting (None unless the attached fleet policy
+    # declares power_cap_w — see repro.policies.hierarchy)
+    power_cap_w: Optional[float] = None
+    cap_violation_s: Optional[float] = None
+    metered_s: Optional[float] = None
+    mean_fleet_power_w: Optional[float] = None
+    peak_fleet_power_w: Optional[float] = None
 
 
 class ServingCluster:
@@ -122,6 +137,7 @@ class ServingCluster:
             resolved.append(spec)
         self.nodes = [EngineNode(e, p) for e, p in zip(engines, resolved)]
         self.router = router
+        self._loop: Optional[EventLoop] = None   # last drain's event loop
 
     # ------------------------------------------------------------------
     @property
@@ -152,9 +168,11 @@ class ServingCluster:
         virtual-time order; nodes are independent, so per-node
         trajectories don't depend on interleaving). A fleet policy, if
         attached, ticks on its own cadence against the loop's global
-        timeline."""
-        return drive(self.nodes, max_iters=max_iters,
-                     fleet_policy=self.fleet_policy)
+        timeline; the loop is kept so ``summary()`` can surface its
+        power-budget accounting."""
+        self._loop = EventLoop(self.nodes, fleet_policy=self.fleet_policy,
+                               max_iters=max_iters)
+        return self._loop.run()
 
     # ------------------------------------------------------------------
     def summary(self) -> ClusterSummary:
@@ -163,7 +181,7 @@ class ServingCluster:
         tpots = [r.tpot for r in fin if r.tpot is not None]
         energy = sum(e.metrics.c.energy_joules_total for e in engines)
         tpot = float(np.mean(tpots)) if tpots else 0.0
-        return ClusterSummary(
+        out = ClusterSummary(
             energy_j=energy,
             finished=len(fin),
             mean_ttft_s=float(np.mean([r.ttft for r in fin])) if fin else 0,
@@ -173,3 +191,11 @@ class ServingCluster:
             node_energy_j=[e.metrics.c.energy_joules_total
                            for e in engines],
         )
+        loop = self._loop
+        if loop is not None and loop._power_cap is not None:
+            out.power_cap_w = loop._power_cap
+            out.cap_violation_s = loop.cap_violation_s
+            out.metered_s = loop.metered_s
+            out.mean_fleet_power_w = loop.mean_fleet_power_w
+            out.peak_fleet_power_w = loop.peak_fleet_power_w
+        return out

@@ -18,6 +18,17 @@ events —
                      at iteration boundaries, which keeps decision
                      sequences bit-identical to the pre-event-loop driver)
 
+Hierarchical power capping rides on FLEET_TICK (``repro.policies.
+hierarchy``): when the fleet policy declares ``coordinates_bands``, the
+loop propagates its per-node ``bands`` after every tick — calling each
+node policy's optional ``set_band(f_lo, f_hi)`` hook and clamping the
+engine's current frequency into the band, so a band that excludes the
+running frequency forces an immediate DVFS transition, billed like any
+other. When the fleet policy declares ``power_cap_w``, the loop also
+meters fleet draw between consecutive ticks into ``cap_violation_s`` /
+``metered_s`` / ``peak_fleet_power_w`` (budget accounting surfaced by
+``ServingCluster.summary``).
+
 Each node event is keyed by the engine's ``next_event_time()`` — the next
 instant it actually does anything — so idle nodes cost nothing until their
 next arrival, and the loop's virtual ``now`` (min over scheduled events)
@@ -34,6 +45,10 @@ import enum
 import heapq
 import itertools
 from typing import Dict, List, Optional, Sequence
+
+#: FLEET_TICK cadence (sim-seconds) when the fleet policy doesn't declare
+#: ``sampling_period_s`` — matches the paper's sub-second telemetry window.
+DEFAULT_FLEET_TICK_PERIOD_S = 0.8
 
 
 class EventKind(enum.IntEnum):
@@ -68,21 +83,39 @@ class EventLoop:
                  max_iters: int = 10_000_000):
         self.nodes = list(nodes)
         self.fleet_policy = fleet_policy
+        # resolved once; the loop never re-reads the policy attribute
+        self._fleet_period = getattr(fleet_policy, "sampling_period_s",
+                                     DEFAULT_FLEET_TICK_PERIOD_S)
         self.t_end = t_end
         self.max_iters = max_iters
         self.now = 0.0                       # virtual time, never decreases
         self.steps = 0
         self.counts: Dict[EventKind, int] = {k: 0 for k in EventKind}
+        # power-budget accounting (active when the fleet policy declares a
+        # cap; see repro.policies.hierarchy)
+        self._power_cap = getattr(fleet_policy, "power_cap_w", None)
+        self.cap_violation_s = 0.0
+        self.metered_s = 0.0
+        self.metered_energy_j = 0.0
+        self.peak_fleet_power_w = 0.0
         self._seq = itertools.count()        # FIFO tie-break at equal times
         self._heap: List[tuple] = []
         self._live = 0
         for i in range(len(self.nodes)):
             if self._schedule_node(i):
                 self._live += 1
+        self._meter_t = 0.0
+        self._meter_e = 0.0
         if fleet_policy is not None and self._live:
-            period = getattr(fleet_policy, "sampling_period_s", 0.8)
             start = min(t for t, _, _, _ in self._heap)
-            self._push(start + period, EventKind.FLEET_TICK, -1)
+            self._meter_t = start
+            self._meter_e = self._fleet_energy_j()
+            # a band coordinator can cap the fleet from t=0, before any
+            # telemetry exists — ask it for initial bands
+            init = getattr(fleet_policy, "initial_bands", None)
+            if init is not None:
+                self._propagate_bands(init(self.engines))
+            self._push(start + self._fleet_period, EventKind.FLEET_TICK, -1)
 
     # ------------------------------------------------------------------
     @property
@@ -102,6 +135,56 @@ class EventLoop:
                 else EventKind.ARRIVAL)
         self._push(t, kind, i)
         return True
+
+    # -- hierarchical power capping (repro.policies.hierarchy) ---------
+    def _propagate_bands(self, bands) -> None:
+        """Deliver per-node frequency bands: hand each band to the node
+        policy's optional ``set_band`` hook and clamp the engine's current
+        frequency into it — a band excluding the running frequency forces
+        a move, billed as a DVFS transition like any other."""
+        if not bands:
+            return
+        for node, band in zip(self.nodes, bands):
+            if band is None:
+                continue
+            lo, hi = band
+            if lo > hi:
+                lo, hi = hi, lo
+            set_band = getattr(node.policy, "set_band", None)
+            if set_band is not None:
+                set_band(lo, hi)
+            eng = node.engine
+            f = min(max(eng.frequency, lo), hi)
+            if f != eng.frequency:
+                eng.set_frequency(f)
+
+    def _fleet_energy_j(self) -> float:
+        return sum(n.engine.metrics.c.energy_joules_total
+                   for n in self.nodes)
+
+    def _meter_power(self, t: float) -> None:
+        """Budget accounting between consecutive FLEET_TICKs: mean fleet
+        draw over the interval, peak tracking, and seconds spent above
+        the declared cap."""
+        if self._power_cap is None:
+            return
+        e = self._fleet_energy_j()
+        if t > self._meter_t:
+            dt = t - self._meter_t
+            de = e - self._meter_e
+            p = de / dt
+            self.metered_s += dt
+            self.metered_energy_j += de
+            if p > self.peak_fleet_power_w:
+                self.peak_fleet_power_w = p
+            if p > self._power_cap:
+                self.cap_violation_s += dt
+        self._meter_t, self._meter_e = t, e
+
+    @property
+    def mean_fleet_power_w(self) -> float:
+        return (self.metered_energy_j / self.metered_s
+                if self.metered_s > 0 else 0.0)
 
     # ------------------------------------------------------------------
     def _run_single(self) -> int:
@@ -150,9 +233,11 @@ class EventLoop:
                 if self._live == 0:
                     continue                       # fleet dies with nodes
                 self.fleet_policy.act(self.engines, t)
+                self._propagate_bands(getattr(self.fleet_policy, "bands",
+                                              None))
+                self._meter_power(t)
                 self.counts[kind] += 1
-                nxt = t + getattr(self.fleet_policy, "sampling_period_s",
-                                  0.8)
+                nxt = t + self._fleet_period
                 if t_end is None or nxt < t_end:
                     self._push(nxt, EventKind.FLEET_TICK, -1)
                 continue
@@ -170,6 +255,11 @@ class EventLoop:
             self.counts[kind] += 1
             if not self._schedule_node(i):
                 self._live -= 1
+        if self.fleet_policy is not None:
+            # final flush: the drain tail past the last FLEET_TICK must be
+            # metered too, or cap violations there would go uncounted
+            self._meter_power(max([self.now]
+                                  + [n.engine.clock for n in self.nodes]))
         return self.steps
 
 

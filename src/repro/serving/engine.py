@@ -27,7 +27,7 @@ from repro.models.common import ModelConfig
 from repro.serving.driver import EngineNode, drive
 from repro.serving.kv_cache import PagedKVCache
 from repro.serving.metrics import MetricsExporter
-from repro.serving.request import Request, RequestState
+from repro.serving.request import Request
 from repro.serving.scheduler import BatchPlan, ContinuousBatchingScheduler
 
 

@@ -1,0 +1,83 @@
+"""Regenerate ``tests/golden_agft_decisions.json`` from scratch.
+
+The golden file pins the exact AGFT decision trajectory (frequencies,
+phases, rounds, total energy, final clock) on a fixed-seed trace; the
+hot-path equivalence suite (``tests/test_vectorized_hotpath.py``) and the
+band/no-cap tests (``tests/test_hierarchy.py``) assert against it. CI's
+``golden-drift`` job runs this script in a fresh process and fails on any
+byte difference between the regenerated file and the committed one, so a
+hot-path "refactor" can't silently shift decisions while the committed
+golden keeps vouching for the old trajectory.
+
+    PYTHONPATH=src python tests/generate_golden.py            # rewrite
+    PYTHONPATH=src python tests/generate_golden.py --check    # verify
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from repro.configs import get_config
+from repro.core import AGFTTuner
+from repro.energy import A6000
+from repro.serving import EngineConfig, InferenceEngine
+from repro.workloads import PROTOTYPES, generate_requests
+
+GOLDEN = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                      "golden_agft_decisions.json")
+
+#: the pinned regression trace (do not change without regenerating AND
+#: reviewing the diff — this redefines what "decision drift" means)
+TRACE = {"workload": "normal", "n": 150, "rate": 3.0, "seed": 7}
+
+
+def generate() -> dict:
+    eng = InferenceEngine(get_config("llama3-3b"), EngineConfig(),
+                          initial_frequency=A6000.f_max)
+    eng.submit(generate_requests(PROTOTYPES[TRACE["workload"]], TRACE["n"],
+                                 base_rate=TRACE["rate"],
+                                 seed=TRACE["seed"]))
+    tuner = AGFTTuner(A6000)
+    eng.drain(policy=tuner)
+    return {
+        "trace": dict(TRACE),
+        "freqs": [h["freq"] for h in tuner.history],
+        "phases": [h["phase"] for h in tuner.history],
+        "rounds": tuner.round,
+        "energy_j": eng.metrics.c.energy_joules_total,
+        "clock": eng.clock,
+    }
+
+
+def render(payload: dict) -> str:
+    """The exact byte encoding of the committed file (json indent=1, no
+    trailing newline) so ``--check`` / CI can compare bytes, not
+    semantics."""
+    return json.dumps(payload, indent=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 if the regenerated golden differs from "
+                         "the committed file (byte comparison)")
+    args = ap.parse_args()
+    fresh = render(generate())
+    if args.check:
+        with open(GOLDEN) as f:
+            committed = f.read()
+        if fresh != committed:
+            print("GOLDEN DRIFT: regenerated trajectory differs from "
+                  f"{GOLDEN}", file=sys.stderr)
+            sys.exit(1)
+        print(f"golden OK: {GOLDEN} reproduces byte-for-byte")
+        return
+    with open(GOLDEN, "w") as f:
+        f.write(fresh)
+    print(f"wrote {GOLDEN}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,7 +1,6 @@
 """Unit tests for the AGFT decision stack: LinUCB math, Page-Hinkley,
 pruning mechanisms, refinement, reward normalization, feature extraction."""
 import numpy as np
-import pytest
 
 from repro.core import (ConvergenceConfig, ConvergenceDetector,
                         FeatureExtractor, LinUCBArm, LinUCBBank, PageHinkley,

@@ -1,7 +1,6 @@
 """Integration: the serving engine driving REAL JAX forward passes (reduced
 tinyllama) through the JaxBackend, with AGFT attached — proves the tuner is
 backend-agnostic (it only sees metrics + set_frequency)."""
-import numpy as np
 
 from repro.configs import get_config
 from repro.core import AGFTConfig, AGFTTuner

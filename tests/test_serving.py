@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
-from repro.core import AGFTConfig, AGFTTuner
+from repro.core import AGFTTuner
 from repro.energy import A6000, DVFSModel, active_param_count, param_count
 from repro.energy.edp import diff_snapshots
 from repro.serving import (EngineConfig, InferenceEngine, PagedKVCache,

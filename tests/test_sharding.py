@@ -3,7 +3,6 @@ metadata; the compile-level proof lives in test_dryrun.py)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.distributed.sharding import (batch_pspec, cache_pspecs,
