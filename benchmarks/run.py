@@ -173,6 +173,27 @@ def _tab6_reduce(results, quick):
     return 0.0, f"max_abs_dev={out['max_abs_deviation_pct']:.1f}%", out
 
 
+def _network_units(quick, deps):
+    from benchmarks import tab_network
+    return [(tab_network._cell, (a,))
+            for a in tab_network.unit_args(
+                150 if quick else 400,
+                tab_network.QUICK_DELAYS_MS if quick else None)]
+
+
+def _network_reduce(results, quick):
+    from benchmarks import tab_network
+    out = tab_network._assemble(results, quiet=True)
+    s = out["summary"]
+    tv = s.get("tick_vs_iteration_at_zero_delay_pct", {})
+    impact = s["delay_impact_pct"].get("iteration", {})
+    worst = impact[max(impact, key=lambda k: float(k[:-2]))] if impact \
+        else {}
+    return 0.0, (f"tick_vs_iter_edp{tv.get('edp', 0):+.1f}%;"
+                 f"maxdelay_ttft{worst.get('ttft_s', 0):+.1f}%;"
+                 f"maxdelay_edp{worst.get('edp', 0):+.1f}%"), out
+
+
 def _powercap_units(quick, deps):
     from benchmarks import tab_powercap
     return [(tab_powercap._cell, (a,))
@@ -208,6 +229,8 @@ GRID = [
     ("tab_fleet_global_vs_pernode", _mono(_tab_fleet)),
     ("tab_powercap_hierarchy", {"units": _powercap_units,
                                 "reduce": _powercap_reduce}),
+    ("tab_network_delay_grid", {"units": _network_units,
+                                "reduce": _network_reduce}),
     ("roofline_terms", _mono(_roofline)),
 ]
 

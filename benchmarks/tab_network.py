@@ -1,0 +1,166 @@
+"""Routing-delay x policy-tick-mode grid (beyond paper; ROADMAP event-core
+items): how much decision quality and EDP shift once requests stop
+teleporting to engines and tuners stop deciding exactly at iteration
+boundaries.
+
+The same fixed-seed trace is served by a 2-node per-node-AGFT cluster
+under every combination of
+
+  delay level   total mean routing delay (client->router->node hops +
+                router FIFO service), 0-50 ms — 0 is the bit-identical
+                anchor (zero-delay NetworkModel == direct submit)
+  tick mode     ``iteration`` (windows gated on the engine clock at
+                iteration boundaries; the golden-pinned paper mode) vs
+                ``tick`` (pure POLICY_TICK events: wall-clock cadence,
+                windows cut at tick time)
+
+Per cell we report energy/EDP/latency, the measured mean delivery delay,
+how many windows the tuners decided on, and DVFS transition counts. The
+summary quantifies the two ROADMAP questions: what 0-50 ms of routing
+delay does to EDP/TTFT (delay rows vs the 0 ms anchor, per mode) and
+what pure-tick scheduling changes at zero delay (tick vs iteration
+anchor cells).
+"""
+from __future__ import annotations
+
+import argparse
+from typing import Dict, List, Optional
+
+from benchmarks.common import PAPER_MODEL, save_json
+from repro.configs import get_config
+from repro.serving import NetworkConfig, NetworkModel
+from repro.serving.cluster import ServingCluster
+from repro.workloads import PROTOTYPES, generate_requests
+
+#: total mean routing delay levels (ms); 0 = the bit-identity anchor
+DELAYS_MS = [0.0, 5.0, 20.0, 50.0]
+QUICK_DELAYS_MS = [0.0, 20.0, 50.0]
+TICK_MODES = ("iteration", "tick")
+N_NODES = 2
+ROUTER_SERVICE_S = 100e-6
+
+
+def network_for(delay_ms: float, seed: int = 0) -> Optional[NetworkModel]:
+    """A NetworkModel whose mean total delay (two hops + router service)
+    is ``delay_ms``; None-delay cells use the zero model so the anchor
+    row exercises the routed event path, not the direct one."""
+    if delay_ms <= 0.0:
+        return NetworkModel()
+    hop = max((delay_ms * 1e-3 - ROUTER_SERVICE_S) / 2.0, 0.0)
+    return NetworkModel(NetworkConfig(hop_latency_s=hop,
+                                      router_service_s=ROUTER_SERVICE_S,
+                                      distribution="lognormal",
+                                      jitter=0.25), seed=seed)
+
+
+def _trace(n: int, seed: int):
+    return generate_requests(PROTOTYPES["normal"], n, base_rate=4.0,
+                             seed=seed)
+
+
+def _serve(delay_ms: float, tick_mode: str, n_requests: int,
+           seed: int) -> Dict:
+    cl = ServingCluster(get_config(PAPER_MODEL), n_nodes=N_NODES,
+                        with_tuners=False, policies=["agft"] * N_NODES,
+                        network=network_for(delay_ms, seed=seed),
+                        policy_tick_mode=tick_mode)
+    cl.submit(_trace(n_requests, seed))
+    steps = cl.drain()
+    s = cl.summary()
+    decisions = sum(len(p.history) for p in cl.policies if p is not None)
+    transitions = sum(e.metrics.c.freq_transitions_total
+                     for e in cl.engines)
+    return {
+        "delay_ms": delay_ms,
+        "tick_mode": tick_mode,
+        "finished": s.finished,
+        "energy_j": s.energy_j,
+        "ttft_s": s.mean_ttft_s,
+        "tpot_s": s.mean_tpot_s,
+        "edp": s.edp,
+        "mean_net_delay_s": s.mean_net_delay_s,
+        "max_net_delay_s": s.max_net_delay_s,
+        "node_frequencies": s.node_frequencies,
+        "policy_decisions": decisions,
+        "freq_transitions": transitions,
+        "engine_steps": steps,
+    }
+
+
+def unit_args(n_requests: int, delays: Optional[List[float]] = None,
+              seed: int = 17) -> List[tuple]:
+    """One unit per (delay, tick-mode) cell."""
+    delays = DELAYS_MS if delays is None else delays
+    return [(d, mode, n_requests, seed)
+            for mode in TICK_MODES for d in delays]
+
+
+def _cell(args: tuple) -> Dict:
+    return _serve(*args)
+
+
+def _assemble(rows: List[Dict], quiet: bool = False) -> Dict:
+    grid: Dict[str, Dict] = {}
+    for r in rows:
+        grid[f"{r['tick_mode']}|{r['delay_ms']:g}ms"] = r
+
+    def rel(row, anchor, keys=("energy_j", "edp", "ttft_s", "tpot_s")):
+        return {k: 100.0 * (row[k] / anchor[k] - 1.0) for k in keys}
+
+    delays = sorted({r["delay_ms"] for r in rows})
+    summary: Dict[str, Dict] = {"delay_impact_pct": {}}
+    for mode in TICK_MODES:
+        anchor = grid.get(f"{mode}|{delays[0]:g}ms")
+        if anchor is None:
+            continue
+        summary["delay_impact_pct"][mode] = {
+            f"{d:g}ms": rel(grid[f"{mode}|{d:g}ms"], anchor)
+            for d in delays[1:] if f"{mode}|{d:g}ms" in grid}
+    it0 = grid.get(f"iteration|{delays[0]:g}ms")
+    tk0 = grid.get(f"tick|{delays[0]:g}ms")
+    if it0 and tk0:
+        summary["tick_vs_iteration_at_zero_delay_pct"] = rel(tk0, it0)
+        summary["tick_vs_iteration_decisions"] = {
+            "iteration": it0["policy_decisions"],
+            "tick": tk0["policy_decisions"]}
+    out = {"grid": grid, "summary": summary}
+    save_json("tab_network.json", out)
+    if not quiet:
+        print(f"{'cell':>18s} {'energy':>9s} {'edp':>9s} {'ttft':>8s} "
+              f"{'tpot':>8s} {'netdelay':>9s} {'decisions':>9s}")
+        for key, r in grid.items():
+            nd = r["mean_net_delay_s"]
+            print(f"{key:>18s} {r['energy_j'] / 1e3:8.1f}k "
+                  f"{r['edp']:9.1f} {r['ttft_s']:7.3f}s "
+                  f"{r['tpot_s'] * 1e3:6.2f}ms "
+                  f"{(nd or 0.0) * 1e3:7.1f}ms {r['policy_decisions']:9d}")
+        tv = summary.get("tick_vs_iteration_at_zero_delay_pct")
+        if tv:
+            print(f"tick vs iteration @0ms: edp {tv['edp']:+.1f}%  "
+                  f"ttft {tv['ttft_s']:+.1f}%")
+        for mode, impact in summary["delay_impact_pct"].items():
+            for lvl, d in impact.items():
+                print(f"{mode} @{lvl} vs 0ms: edp {d['edp']:+.1f}%  "
+                      f"ttft {d['ttft_s']:+.1f}%")
+    return out
+
+
+def run(n_requests: int = 400, delays: Optional[List[float]] = None,
+        seed: int = 17, quiet: bool = False) -> Dict:
+    rows = [_cell(a) for a in unit_args(n_requests, delays, seed)]
+    return _assemble(rows, quiet=quiet)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller trace + 3 delay levels (CI bench-smoke "
+                         "cell)")
+    ap.add_argument("--requests", type=int, default=0)
+    args = ap.parse_args()
+    n = args.requests or (150 if args.quick else 400)
+    run(n_requests=n, delays=QUICK_DELAYS_MS if args.quick else None)
+
+
+if __name__ == "__main__":
+    main()

@@ -65,13 +65,22 @@ class TelemetryMonitor:
         """True once the engine clock has crossed the next sample point."""
         return engine.clock >= self.next_sample
 
-    def observe(self, engine) -> Optional[WindowStats]:
+    def observe(self, engine,
+                now: Optional[float] = None) -> Optional[WindowStats]:
         """Snapshot now and return the window since the previous snapshot.
 
         Returns ``None`` on the first observation (no window exists yet);
         either way the sampling window is (re)armed from the current clock.
+
+        ``now`` overrides the window's cut point (POLICY_TICK mode: the
+        poller samples on its own wall-clock cadence, so windows span
+        exact periods instead of ending wherever an iteration boundary
+        happened to land). The snapshot itself is whatever the counters
+        hold — an engine mid-long-iteration has already advanced past the
+        tick, exactly like a real scrape racing the serving loop.
         """
-        now = engine.clock
+        if now is None:
+            now = engine.clock
         snap = engine.metrics.snapshot()
         window = None
         if self.prev_snapshot is not None:

@@ -128,13 +128,20 @@ class AGFTTuner:
             return None
         return self.act(engine)
 
-    def act(self, engine) -> float:
-        window = self.monitor.observe(engine)
+    def tick(self, engine, now: float) -> float:
+        """POLICY_TICK entrypoint (``policy_tick_mode="tick"``): one
+        decision per wall-clock tick, the telemetry window cut at the
+        tick's virtual time ``now`` instead of at an iteration boundary
+        (the event loop owns the cadence; no due-gating here)."""
+        return self.act(engine, now=now)
+
+    def act(self, engine, now: Optional[float] = None) -> float:
+        window = self.monitor.observe(engine, now=now)
         if window is None:
             # first observation: the monitor armed the window; take the floor
             f0 = self.bank.select_ucb(np.zeros(self.features.dim),
                                       self.cfg.ucb_alpha)
-            self._actuate(engine, f0, None, None, None)
+            self._actuate(engine, f0, None, None, None, t=now)
             return f0
 
         x_t = self.features(window)
@@ -170,12 +177,13 @@ class AGFTTuner:
             phase = "explore"
 
         # 4. actuate + bookkeeping (the monitor already re-armed the window)
-        self._actuate(engine, f, reward, window, phase, x_t)
+        self._actuate(engine, f, reward, window, phase, x_t, t=now)
         return f
 
     # ------------------------------------------------------------------
     def _actuate(self, engine, f: float, reward, window, phase,
-                 x_t: Optional[np.ndarray] = None) -> None:
+                 x_t: Optional[np.ndarray] = None,
+                 t: Optional[float] = None) -> None:
         engine.set_frequency(f)
         self.prev_switched = (self.prev_action is not None
                               and float(f) != self.prev_action)
@@ -184,7 +192,7 @@ class AGFTTuner:
         self.prev_context = (x_t if x_t is not None
                              else np.zeros(self.features.dim))
         self.history.append({
-            "t": engine.clock,
+            "t": engine.clock if t is None else t,
             "freq": float(f),
             "reward": reward,
             "edp": window.edp if window else None,

@@ -14,6 +14,11 @@ cluster — under a workload with any registered power policy (or none).
   # per-node AGFT loops fine-tune inside them
   python -m repro.launch.serve --nodes 4 --fleet-policy hierarchy \
       --power-cap-w 800 --policy agft
+  # realistic routing path (WAN-ish ~50 ms delivery delay) + per-node
+  # policies deciding on wall-clock POLICY_TICK events instead of
+  # iteration boundaries
+  python -m repro.launch.serve --nodes 2 --policy agft \
+      --network-model wan --policy-tick-mode tick
 """
 from __future__ import annotations
 
@@ -23,14 +28,16 @@ import json
 import numpy as np
 
 from repro.configs import get_config
-from repro.energy import A6000, TPU_V5E
+from repro.energy import A6000, A6000_MEASURED, TPU_V5E
 from repro.policies import available_policies, get_policy
-from repro.serving import EngineConfig, InferenceEngine
+from repro.serving import (NETWORK_PRESETS, POLICY_TICK_MODES, EngineConfig,
+                           InferenceEngine, NetworkModel)
 from repro.serving.cluster import ServingCluster
 from repro.workloads import (PROTOTYPES, generate_azure_trace,
                              generate_requests)
 
-HARDWARE = {"a6000": A6000, "tpu-v5e": TPU_V5E}
+HARDWARE = {"a6000": A6000, "a6000-measured": A6000_MEASURED,
+            "tpu-v5e": TPU_V5E}
 
 
 def build_engine(arch: str, hardware_name: str = "a6000",
@@ -129,8 +136,14 @@ def _serve_cluster(args) -> dict:
         policies = _node_policies(args, hw)
     else:
         policies = None     # single-frequency controllers actuate alone
+    network = None
+    if args.network_model != "none":
+        network = NetworkModel.from_spec(args.network_model,
+                                         seed=args.network_seed)
     cl = ServingCluster(get_config(args.arch), n_nodes=args.nodes,
-                        hardware=hw, policies=policies, fleet_policy=fleet)
+                        hardware=hw, policies=policies, fleet_policy=fleet,
+                        network=network,
+                        policy_tick_mode=args.policy_tick_mode)
     if args.policy == "none" and args.frequency:
         for e in cl.engines:
             e.set_frequency(args.frequency)
@@ -139,6 +152,8 @@ def _serve_cluster(args) -> dict:
     s = cl.summary()
     out = {
         "nodes": args.nodes,
+        "network_model": args.network_model,
+        "policy_tick_mode": args.policy_tick_mode,
         "fleet_policy": args.fleet_policy,
         "policy": (args.policy if fleet is None
                    or getattr(fleet, "coordinates_bands", False)
@@ -158,6 +173,9 @@ def _serve_cluster(args) -> dict:
         out["metered_s"] = s.metered_s
         out["mean_fleet_power_w"] = s.mean_fleet_power_w
         out["peak_fleet_power_w"] = s.peak_fleet_power_w
+    if s.mean_net_delay_s is not None:
+        out["mean_net_delay_s"] = s.mean_net_delay_s
+        out["max_net_delay_s"] = s.max_net_delay_s
     return out
 
 
@@ -189,13 +207,29 @@ def main():
                     help="cluster power budget in watts for --fleet-policy "
                          "hierarchy/hierarchy-uniform (0 = uncapped); with "
                          "other fleet policies it only meters violations")
+    ap.add_argument("--network-model", default="none",
+                    help="routing-path model for --nodes >= 2: 'none' "
+                         "(instant placement), a preset "
+                         f"({', '.join(sorted(NETWORK_PRESETS))}), or "
+                         "fixed:<ms> for a constant total routing delay")
+    ap.add_argument("--network-seed", type=int, default=0,
+                    help="seed of the network model's hop-latency stream")
+    ap.add_argument("--policy-tick-mode", default="iteration",
+                    choices=list(POLICY_TICK_MODES),
+                    help="when per-node policies decide: 'iteration' "
+                         "(engine-clock gating at iteration boundaries; "
+                         "golden-pinned default) or 'tick' (wall-clock "
+                         "POLICY_TICK events, windows cut at tick time)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="")
     args = ap.parse_args()
 
     if args.fleet_policy != "none" and args.nodes < 2:
         ap.error("--fleet-policy needs --nodes >= 2")
-    if args.nodes > 1:
+    # network routing and pure policy ticks live in the cluster/event-loop
+    # path; a single node just becomes a 1-node cluster there
+    if (args.nodes > 1 or args.network_model != "none"
+            or args.policy_tick_mode != "iteration"):
         summary = _serve_cluster(args)
     else:
         eng = build_engine(args.arch, args.hardware)

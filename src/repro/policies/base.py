@@ -20,6 +20,12 @@ node-local loop fine-tunes inside it. ``WindowedPolicy`` implements it by
 clamping every decision into the band; AGFT masks its LinUCB arms
 instead. Policies without the hook simply aren't band-governed (the
 event loop still clamps the engine's frequency into the band).
+
+A second OPTIONAL hook, ``tick(engine, now)``, supports the event loop's
+pure POLICY_TICK scheduling (``policy_tick_mode="tick"``): one decision
+per wall-clock tick, telemetry window cut at the tick's virtual time.
+``WindowedPolicy`` and ``AGFTTuner`` implement it; duck-typed minimal
+policies without it fall back to ``maybe_act`` at tick times.
 """
 from __future__ import annotations
 
@@ -88,14 +94,24 @@ class WindowedPolicy:
     def maybe_act(self, engine) -> Optional[float]:
         if not self.monitor.due(engine):
             return None
-        window = self.monitor.observe(engine)
+        # a due iteration-gated decision IS a tick cut at the engine
+        # clock — one decision body, two gates
+        return self.tick(engine, engine.clock)
+
+    def tick(self, engine, now: float) -> Optional[float]:
+        """POLICY_TICK entrypoint (``policy_tick_mode="tick"``): decide
+        once per wall-clock tick, with the telemetry window cut at the
+        tick's virtual time ``now`` instead of at an iteration boundary.
+        One tick = one decision — the monitor's due-gating is the event
+        loop's job in this mode (and ``maybe_act``'s in iteration mode)."""
+        window = self.monitor.observe(engine, now=now)
         f = self.decide(window, engine)
         if f is not None:
             f = float(min(max(f, self.hw.f_min), self.hw.f_max))
             if self.band is not None:
                 f = float(min(max(f, self.band[0]), self.band[1]))
             engine.set_frequency(f)
-        self._record(engine, f, window)
+        self._record(engine, f, window, t=now)
         return f
 
     def decide(self, window: Optional[WindowStats],
@@ -105,9 +121,10 @@ class WindowedPolicy:
 
     # ------------------------------------------------------------------
     def _record(self, engine, f: Optional[float],
-                window: Optional[WindowStats]) -> None:
+                window: Optional[WindowStats],
+                t: Optional[float] = None) -> None:
         self.history.append({
-            "t": engine.clock,
+            "t": engine.clock if t is None else t,
             "freq": float(engine.frequency),
             "reward": None,
             "edp": window.edp if window else None,

@@ -1,12 +1,17 @@
-from repro.serving.driver import EngineNode, EventKind, EventLoop, drive
+from repro.serving.driver import (EngineNode, EventKind, EventLoop,
+                                  POLICY_TICK_MODES, drive)
 from repro.serving.engine import (EngineConfig, InferenceEngine, JaxBackend,
                                   SimBackend)
 from repro.serving.kv_cache import PagedKVCache
 from repro.serving.metrics import MetricsExporter
+from repro.serving.network import (DeliverySchedule, NetworkConfig,
+                                   NetworkModel, PRESETS as NETWORK_PRESETS)
 from repro.serving.request import Request, RequestState
 from repro.serving.scheduler import BatchPlan, ContinuousBatchingScheduler
 
 __all__ = ["EngineConfig", "EngineNode", "EventKind", "EventLoop",
            "InferenceEngine", "JaxBackend", "SimBackend", "PagedKVCache",
-           "MetricsExporter", "Request", "RequestState", "BatchPlan",
+           "MetricsExporter", "NetworkConfig", "NetworkModel",
+           "NETWORK_PRESETS", "DeliverySchedule", "POLICY_TICK_MODES",
+           "Request", "RequestState", "BatchPlan",
            "ContinuousBatchingScheduler", "drive"]

@@ -26,6 +26,20 @@ FLEET_TICK and the node loops fine-tune inside them (``repro.policies.
 hierarchy``). When the fleet policy declares ``power_cap_w``, the event
 loop meters the fleet draw and ``summary()`` reports the budget
 accounting (``cap_violation_s``, mean/peak fleet watts).
+
+``network=`` routes requests through a :class:`repro.serving.network.
+NetworkModel` (instance, preset name like ``"wan"``, or ``fixed:<ms>``
+spec): each submit is priced with per-hop latency + router queueing and
+becomes an ARRIVAL *rescheduling* event the event loop delivers at the
+request's network delivery time — instead of instant placement at submit
+time. Routing decisions still happen at submit in arrival order (the
+in-flight count keeps the router's load view identical), so a zero-delay
+network is bit-identical to no network at all.
+
+``policy_tick_mode="tick"`` decouples per-node policy decisions from
+iteration boundaries: the loop fires per-node POLICY_TICK events on each
+policy's sampling period and telemetry windows are cut at tick time. The
+default ``"iteration"`` keeps the golden-pinned historical behavior.
 """
 from __future__ import annotations
 
@@ -38,8 +52,9 @@ from repro.core import AGFTConfig
 from repro.energy import A6000, HardwareSpec
 from repro.models.common import ModelConfig
 from repro.policies import get_policy
-from repro.serving.driver import EngineNode, EventLoop
+from repro.serving.driver import POLICY_TICK_MODES, EngineNode, EventLoop
 from repro.serving.engine import EngineConfig, InferenceEngine
+from repro.serving.network import DeliverySchedule, NetworkModel
 from repro.serving.request import Request
 
 PolicySpec = Union[str, None, object]   # registry name | None | instance
@@ -84,6 +99,9 @@ class ClusterSummary:
     metered_s: Optional[float] = None
     mean_fleet_power_w: Optional[float] = None
     peak_fleet_power_w: Optional[float] = None
+    # routing-path accounting (None unless a network model is attached)
+    mean_net_delay_s: Optional[float] = None
+    max_net_delay_s: Optional[float] = None
 
 
 class ServingCluster:
@@ -94,7 +112,9 @@ class ServingCluster:
                  with_tuners: bool = True,
                  policies: Optional[Sequence[PolicySpec]] = None,
                  router: Callable = route_least_loaded,
-                 fleet_policy: PolicySpec = None):
+                 fleet_policy: PolicySpec = None,
+                 network: Union[NetworkModel, str, None] = None,
+                 policy_tick_mode: str = "iteration"):
         """``policies`` takes one entry per node — a registry name, a
         ready policy instance, or None (fixed clocks). When omitted,
         ``with_tuners`` keeps the legacy behaviour: an AGFT tuner per node
@@ -102,7 +122,11 @@ class ServingCluster:
         attaches a FLEET-scope controller instead (registry name like
         ``"global"`` or instance); per-node policies then default to None
         so exactly one authority actuates each node (pass both explicitly
-        for hierarchical experiments)."""
+        for hierarchical experiments). ``network`` prices each submit's
+        routing path (NetworkModel instance, preset name, or
+        ``fixed:<ms>`` spec) and turns placement into delayed delivery;
+        ``policy_tick_mode`` picks iteration-gated (default) or pure
+        wall-clock POLICY_TICK policy scheduling."""
         engines = [InferenceEngine(model_cfg,
                                    engine_cfg or EngineConfig(),
                                    hardware=hardware,
@@ -137,6 +161,18 @@ class ServingCluster:
             resolved.append(spec)
         self.nodes = [EngineNode(e, p) for e, p in zip(engines, resolved)]
         self.router = router
+        if isinstance(network, str):
+            network = NetworkModel.from_spec(network)
+        self.network = network
+        if policy_tick_mode not in POLICY_TICK_MODES:
+            raise ValueError(
+                f"policy_tick_mode must be one of {POLICY_TICK_MODES}, "
+                f"got {policy_tick_mode!r}")
+        self.policy_tick_mode = policy_tick_mode
+        # priced deliveries awaiting their ROUTE event; persists across
+        # drains so run_until-style repeated draining keeps consuming it
+        self._deliveries = (DeliverySchedule() if network is not None
+                            else None)
         self._loop: Optional[EventLoop] = None   # last drain's event loop
 
     # ------------------------------------------------------------------
@@ -153,15 +189,27 @@ class ServingCluster:
 
     # ------------------------------------------------------------------
     def submit(self, requests: List[Request]) -> None:
-        """Route each request at its arrival time (arrival order)."""
+        """Route each request at its arrival time (arrival order). With a
+        network model attached, placement is deferred: the request's
+        routing path is priced (hops + router queueing) and the event
+        loop delivers it to its engine at the network delivery time — the
+        engine's in-flight counter keeps the router's load view identical
+        to the direct path meanwhile."""
         engines = self.engines
+        net = self.network
         for req in sorted(requests, key=lambda r: r.arrival_time):
             idx = self.router(engines, req)
-            engines[idx].submit([req])
+            if net is None:
+                engines[idx].submit([req])
+            else:
+                req.delivery_time = net.delivery_time(req.arrival_time)
+                engines[idx].inflight += 1
+                self._deliveries.push(req.delivery_time, idx, req)
 
     @property
     def has_work(self) -> bool:
-        return any(n.engine.has_work for n in self.nodes)
+        return (any(n.engine.has_work for n in self.nodes)
+                or bool(self._deliveries))
 
     def drain(self, max_iters: int = 10_000_000) -> int:
         """Advance all nodes through the shared event loop (events fire in
@@ -169,9 +217,12 @@ class ServingCluster:
         trajectories don't depend on interleaving). A fleet policy, if
         attached, ticks on its own cadence against the loop's global
         timeline; the loop is kept so ``summary()`` can surface its
-        power-budget accounting."""
+        power-budget accounting. In-flight routed requests ride along as
+        ROUTE events."""
         self._loop = EventLoop(self.nodes, fleet_policy=self.fleet_policy,
-                               max_iters=max_iters)
+                               max_iters=max_iters,
+                               router=self._deliveries,
+                               policy_tick_mode=self.policy_tick_mode)
         return self._loop.run()
 
     # ------------------------------------------------------------------
@@ -198,4 +249,8 @@ class ServingCluster:
             out.metered_s = loop.metered_s
             out.mean_fleet_power_w = loop.mean_fleet_power_w
             out.peak_fleet_power_w = loop.peak_fleet_power_w
+        if self.network is not None:
+            delays = [r.net_delay for r in fin if r.net_delay is not None]
+            out.mean_net_delay_s = float(np.mean(delays)) if delays else 0.0
+            out.max_net_delay_s = float(np.max(delays)) if delays else 0.0
         return out

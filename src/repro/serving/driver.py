@@ -13,10 +13,27 @@ events —
                      policy gets the iteration-complete callback
 ``FLEET_TICK``       a fleet-scope policy (:class:`repro.policies.fleet.
                      FleetPolicy`) samples aggregated telemetry on its own
-                     cadence — the policy-tick event per-node controllers
-                     don't need (their monitors gate on the engine clock
-                     at iteration boundaries, which keeps decision
-                     sequences bit-identical to the pre-event-loop driver)
+                     cadence
+``ROUTE``            the router's dispatch pipe (:class:`repro.serving.
+                     network.DeliverySchedule`) delivers priced requests
+                     to their engines: an arrival is *rescheduled* from
+                     its submit-time placement to its network delivery
+                     time. A delivery that lands earlier than a node's
+                     outstanding event supersedes it (per-node event
+                     versioning), and a drained node is revived — the
+                     router is a first-class event source, not a
+                     pre-drain bulk load
+``POLICY_TICK``      per-node policy decision on a wall-clock cadence
+                     (``policy_tick_mode="tick"``): telemetry windows are
+                     cut at the tick's virtual time, decoupling decision
+                     boundaries from iteration boundaries. The default
+                     mode (``"iteration"``) keeps the historical
+                     behavior — policies gate on the engine clock at
+                     iteration boundaries — which stays bit-identical to
+                     the pre-event-loop driver (the committed golden
+                     trajectory); pure-tick trajectories are pinned by
+                     their own golden (``tests/golden_agft_decisions_
+                     tick.json``)
 
 Hierarchical power capping rides on FLEET_TICK (``repro.policies.
 hierarchy``): when the fleet policy declares ``coordinates_bands``, the
@@ -32,11 +49,14 @@ meters fleet draw between consecutive ticks into ``cap_violation_s`` /
 Each node event is keyed by the engine's ``next_event_time()`` — the next
 instant it actually does anything — so idle nodes cost nothing until their
 next arrival, and the loop's virtual ``now`` (min over scheduled events)
-is a coherent global timeline for fleet controllers. Nodes are independent
-simulations, so per-node trajectories are identical to the old
-laggard-clock loop; only the interleaving (and hence where fleet ticks can
-see the fleet) changes. O(log n) per event; heterogeneous per-node
-policies and a cluster-global controller are both free.
+is a coherent global timeline for fleet controllers and the router. At
+equal times, ROUTE events outrank node events (a delivery due at *t* is
+visible to an iteration at *t*, exactly as an already-placed arrival
+would be); everything else stays FIFO. Nodes are independent simulations,
+so per-node trajectories are identical to the old laggard-clock loop;
+only the interleaving (and hence where fleet ticks can see the fleet)
+changes. O(log n) per event; heterogeneous per-node policies, a
+cluster-global controller, and a delayed routing path are all free.
 """
 from __future__ import annotations
 
@@ -50,12 +70,24 @@ from typing import Dict, List, Optional, Sequence
 #: ``sampling_period_s`` — matches the paper's sub-second telemetry window.
 DEFAULT_FLEET_TICK_PERIOD_S = 0.8
 
+#: POLICY_TICK cadence when a node policy declares no sampling period of
+#: its own (same sub-second window as the fleet default).
+DEFAULT_POLICY_TICK_PERIOD_S = 0.8
+
+#: valid ``policy_tick_mode`` values: ``"iteration"`` invokes node
+#: policies after every engine step (monitors gate on the engine clock —
+#: the golden-pinned historical behavior); ``"tick"`` schedules per-node
+#: POLICY_TICK events on the policy's sampling period instead.
+POLICY_TICK_MODES = ("iteration", "tick")
+
 
 class EventKind(enum.IntEnum):
     """What a scheduled event will do when it fires."""
     ARRIVAL = 0        # idle engine: next request lands, then it iterates
     ITERATION = 1      # engine with schedulable work runs one iteration
     FLEET_TICK = 2     # fleet-scope policy samples aggregated telemetry
+    ROUTE = 3          # router delivers in-flight requests to engines
+    POLICY_TICK = 4    # node policy decides on a wall-clock cadence
 
 
 @dataclasses.dataclass
@@ -65,24 +97,50 @@ class EngineNode:
     policy: Optional[object] = None     # PowerPolicy (node scope)
 
 
+def _policy_period(policy) -> float:
+    """A node policy's decision cadence: its monitor's sampling period
+    (WindowedPolicy, AGFTTuner), a bare ``sampling_period_s`` attribute,
+    or the sub-second default."""
+    monitor = getattr(policy, "monitor", None)
+    period = getattr(monitor, "sampling_period_s", None)
+    if period is None:
+        period = getattr(policy, "sampling_period_s", None)
+    return float(period) if period else DEFAULT_POLICY_TICK_PERIOD_S
+
+
 class EventLoop:
     """Event-scheduled driver over a set of :class:`EngineNode`.
 
-    Exactly one event is outstanding per live node; firing it advances the
-    engine one step (``engine.step()`` — idle-advance and/or iteration),
-    invokes the node's policy, and reschedules at the engine's next event
-    time. ``fleet_policy`` (optional) receives ``act(engines, now)`` ticks
-    every ``fleet_policy.sampling_period_s`` sim-seconds while any node is
-    live. A node leaves the loop when it drains or its clock reaches
-    ``t_end``; ``run`` returns the number of engine steps executed.
+    At most one node event is outstanding per live node; firing it
+    advances the engine one step (``engine.step()`` — idle-advance and/or
+    iteration), invokes the node's policy (iteration mode), and
+    reschedules at the engine's next event time. ``fleet_policy``
+    (optional) receives ``act(engines, now)`` ticks every
+    ``fleet_policy.sampling_period_s`` sim-seconds while any node is live
+    or deliveries are in flight. ``router`` (optional, a
+    :class:`repro.serving.network.DeliverySchedule`) feeds ROUTE events:
+    deliveries land in engine arrival heaps at their priced network
+    delivery times, superseding stale node events and reviving drained
+    nodes. ``policy_tick_mode="tick"`` moves node-policy decisions onto
+    per-node POLICY_TICK events (windows cut at tick time). A node leaves
+    the loop when it drains or its clock reaches ``t_end``; ``run``
+    returns the number of engine steps executed.
     """
 
     def __init__(self, nodes: Sequence[EngineNode], *,
                  fleet_policy: Optional[object] = None,
                  t_end: Optional[float] = None,
-                 max_iters: int = 10_000_000):
+                 max_iters: int = 10_000_000,
+                 router: Optional[object] = None,
+                 policy_tick_mode: str = "iteration"):
+        if policy_tick_mode not in POLICY_TICK_MODES:
+            raise ValueError(
+                f"policy_tick_mode must be one of {POLICY_TICK_MODES}, "
+                f"got {policy_tick_mode!r}")
         self.nodes = list(nodes)
         self.fleet_policy = fleet_policy
+        self.router = router
+        self.policy_tick_mode = policy_tick_mode
         # resolved once; the loop never re-reads the policy attribute
         self._fleet_period = getattr(fleet_policy, "sampling_period_s",
                                      DEFAULT_FLEET_TICK_PERIOD_S)
@@ -100,14 +158,23 @@ class EventLoop:
         self.peak_fleet_power_w = 0.0
         self._seq = itertools.count()        # FIFO tie-break at equal times
         self._heap: List[tuple] = []
+        # per-node scheduling state: time of the outstanding event (None
+        # when the node holds no event) and its version — a delivery that
+        # reschedules a node bumps the version, orphaning the heap entry
+        self._sched_t: List[Optional[float]] = [None] * len(self.nodes)
+        self._ver: List[int] = [0] * len(self.nodes)
         self._live = 0
         for i in range(len(self.nodes)):
             if self._schedule_node(i):
                 self._live += 1
+        if router is not None:
+            nxt = router.next_time()
+            if nxt is not None and (t_end is None or nxt < t_end):
+                self._push(nxt, EventKind.ROUTE, -1)
         self._meter_t = 0.0
         self._meter_e = 0.0
-        if fleet_policy is not None and self._live:
-            start = min(t for t, _, _, _ in self._heap)
+        if fleet_policy is not None and self._heap:
+            start = min(t for t, *_ in self._heap)
             self._meter_t = start
             self._meter_e = self._fleet_energy_j()
             # a band coordinator can cap the fleet from t=0, before any
@@ -116,6 +183,32 @@ class EventLoop:
             if init is not None:
                 self._propagate_bands(init(self.engines))
             self._push(start + self._fleet_period, EventKind.FLEET_TICK, -1)
+        self._tick_period: List[float] = [0.0] * len(self.nodes)
+        # whether a POLICY_TICK is outstanding for the node — a ROUTE
+        # revival restarts a dead train, so tick liveness never depends
+        # on the caller maintaining ``engine.inflight`` (ServingCluster
+        # does; direct EventLoop/drive users need not)
+        self._tick_alive: List[bool] = [False] * len(self.nodes)
+        if policy_tick_mode == "tick" and self._heap:
+            # a node's tick train anchors where the node first gets work:
+            # its scheduled event, or — when requests are still in the
+            # network — its earliest delivery (identical instants on the
+            # zero-delay path, so routed and direct tick trajectories
+            # coincide)
+            deliveries = (router.first_time_per_node()
+                          if router is not None else {})
+            for i, node in enumerate(self.nodes):
+                if node.policy is None:
+                    continue
+                self._tick_period[i] = _policy_period(node.policy)
+                t0 = self._sched_t[i]
+                if t0 is None:
+                    t0 = deliveries.get(i)
+                if t0 is None:
+                    continue        # node never receives work: no ticks
+                if t_end is None or t0 < t_end:
+                    self._push(t0, EventKind.POLICY_TICK, i)
+                    self._tick_alive[i] = True
 
     # ------------------------------------------------------------------
     @property
@@ -123,18 +216,39 @@ class EventLoop:
         return [n.engine for n in self.nodes]
 
     def _push(self, t: float, kind: EventKind, node: int) -> None:
-        heapq.heappush(self._heap, (t, next(self._seq), kind, node))
+        # Same-time ordering: ROUTE outranks node events (a delivery due
+        # at t must be visible to an iteration at t, exactly as an
+        # already-placed arrival would be) and POLICY_TICK yields to them
+        # (a tick coinciding with a node's event observes the engine
+        # after it fired, whichever path seeded the event) — so routed
+        # and direct configurations order identically at shared instants.
+        # Everything else stays FIFO. Node events carry their node's
+        # version so a reschedule can orphan them in place.
+        if kind is EventKind.ROUTE:
+            prio = 0
+        elif kind is EventKind.POLICY_TICK:
+            prio = 2
+        else:
+            prio = 1
+        ver = self._ver[node] if node >= 0 else 0
+        heapq.heappush(self._heap,
+                       (t, prio, next(self._seq), kind, node, ver))
 
     def _schedule_node(self, i: int) -> bool:
         """Schedule node ``i``'s next event; False if it has drained."""
         eng = self.nodes[i].engine
         t = eng.next_event_time()
         if t is None:
+            self._sched_t[i] = None
             return False
         kind = (EventKind.ITERATION if eng.sched.has_work
                 else EventKind.ARRIVAL)
+        self._sched_t[i] = t
         self._push(t, kind, i)
         return True
+
+    def _router_pending(self) -> bool:
+        return self.router is not None and self.router.next_time() is not None
 
     # -- hierarchical power capping (repro.policies.hierarchy) ---------
     def _propagate_bands(self, bands) -> None:
@@ -186,13 +300,74 @@ class EventLoop:
         return (self.metered_energy_j / self.metered_s
                 if self.metered_s > 0 else 0.0)
 
+    # -- event handlers ------------------------------------------------
+    def _fire_route(self, t: float) -> None:
+        """Deliver every request due at ``t`` to its engine's arrival
+        heap, then repair node scheduling: a delivery earlier than a
+        node's outstanding event supersedes it (version bump); a drained
+        node comes back to life."""
+        t_end = self.t_end
+        touched = {}
+        for idx, req in self.router.pop_due(t):
+            self.nodes[idx].engine.deliver(req, t)
+            touched[idx] = True
+        self.counts[EventKind.ROUTE] += 1
+        for idx in touched:
+            eng = self.nodes[idx].engine
+            if t_end is not None and eng.clock >= t_end:
+                continue                     # past the horizon: stays down
+            nt = eng.next_event_time()
+            if nt is None:
+                continue
+            if self._sched_t[idx] is None:
+                if self._schedule_node(idx):
+                    self._live += 1          # revival
+            elif nt < self._sched_t[idx]:
+                self._ver[idx] += 1          # orphan the stale event
+                self._schedule_node(idx)
+            if (self.policy_tick_mode == "tick"
+                    and not self._tick_alive[idx]
+                    and self.nodes[idx].policy is not None
+                    and (t_end is None or t < t_end)):
+                # the node's tick train died while it was drained —
+                # re-anchor it at the delivery that brought it back
+                self._push(t, EventKind.POLICY_TICK, idx)
+                self._tick_alive[idx] = True
+        nxt = self.router.next_time()
+        if nxt is not None and (t_end is None or nxt < t_end):
+            self._push(nxt, EventKind.ROUTE, -1)
+
+    def _fire_policy_tick(self, t: float, i: int) -> None:
+        """One wall-clock policy decision for node ``i``: the policy's
+        telemetry window is cut at the tick's virtual time ``t`` (not at
+        an iteration boundary). The tick train dies only when the node is
+        fully drained — idle gaps between arrivals still tick (a real
+        poller doesn't stop polling an idle server)."""
+        node = self.nodes[i]
+        eng = node.engine
+        if (self._sched_t[i] is None and not eng.has_work
+                and getattr(eng, "inflight", 0) == 0):
+            self._tick_alive[i] = False      # drained: a ROUTE revives it
+            return
+        self.counts[EventKind.POLICY_TICK] += 1
+        tick = getattr(node.policy, "tick", None)
+        if tick is not None:
+            tick(eng, t)
+        else:                                # duck-typed minimal policies
+            node.policy.maybe_act(eng)
+        nxt = t + self._tick_period[i]
+        if self.t_end is None or nxt < self.t_end:
+            self._push(nxt, EventKind.POLICY_TICK, i)
+        else:
+            self._tick_alive[i] = False
+
     # ------------------------------------------------------------------
     def _run_single(self) -> int:
-        """Single node, no fleet policy — the overwhelmingly common shape
-        (every benchmark cell): exactly one event is ever outstanding, so
-        the loop re-derives it inline instead of round-tripping the heap.
-        Trajectories, step counts, ``now`` and event counts are identical
-        to the general loop."""
+        """Single node, no fleet policy, no router, iteration-gated — the
+        overwhelmingly common shape (every benchmark cell): exactly one
+        event is ever outstanding, so the loop re-derives it inline
+        instead of round-tripping the heap. Trajectories, step counts,
+        ``now`` and event counts are identical to the general loop."""
         node = self.nodes[0]
         eng = node.engine
         policy = node.policy
@@ -221,17 +396,20 @@ class EventLoop:
         return self.steps
 
     def run(self) -> int:
-        if len(self.nodes) == 1 and self.fleet_policy is None:
+        if (len(self.nodes) == 1 and self.fleet_policy is None
+                and self.router is None
+                and self.policy_tick_mode == "iteration"):
             return self._run_single()
         t_end = self.t_end
+        iteration_gated = self.policy_tick_mode == "iteration"
         while self._heap and self.steps < self.max_iters:
-            t, _, kind, i = heapq.heappop(self._heap)
+            t, _, _, kind, i, ver = heapq.heappop(self._heap)
             if t > self.now:
                 self.now = t
 
             if kind is EventKind.FLEET_TICK:
-                if self._live == 0:
-                    continue                       # fleet dies with nodes
+                if self._live == 0 and not self._router_pending():
+                    continue                   # fleet dies with nodes
                 self.fleet_policy.act(self.engines, t)
                 self._propagate_bands(getattr(self.fleet_policy, "bands",
                                               None))
@@ -242,6 +420,17 @@ class EventLoop:
                     self._push(nxt, EventKind.FLEET_TICK, -1)
                 continue
 
+            if kind is EventKind.ROUTE:
+                self._fire_route(t)
+                continue
+
+            if kind is EventKind.POLICY_TICK:
+                self._fire_policy_tick(t, i)
+                continue
+
+            if ver != self._ver[i]:
+                continue                       # superseded by a delivery
+            self._sched_t[i] = None
             node = self.nodes[i]
             eng = node.engine
             if not eng.has_work or (t_end is not None
@@ -249,7 +438,7 @@ class EventLoop:
                 self._live -= 1
                 continue
             eng.step()
-            if node.policy is not None:
+            if iteration_gated and node.policy is not None:
                 node.policy.maybe_act(eng)
             self.steps += 1
             self.counts[kind] += 1
@@ -265,9 +454,12 @@ class EventLoop:
 
 def drive(nodes: Sequence[EngineNode], *, t_end: Optional[float] = None,
           max_iters: int = 10_000_000,
-          fleet_policy: Optional[object] = None) -> int:
+          fleet_policy: Optional[object] = None,
+          router: Optional[object] = None,
+          policy_tick_mode: str = "iteration") -> int:
     """Advance ``nodes`` through the shared event loop until no work
     remains (or ``t_end``/``max_iters``); returns engine steps executed.
     Thin facade over :class:`EventLoop` for the common one-shot case."""
     return EventLoop(nodes, fleet_policy=fleet_policy, t_end=t_end,
-                     max_iters=max_iters).run()
+                     max_iters=max_iters, router=router,
+                     policy_tick_mode=policy_tick_mode).run()

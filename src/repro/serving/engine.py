@@ -14,6 +14,16 @@ does anything — now, if the scheduler holds work; at the next arrival, if
 it is idle. ``step`` = (idle-advance to that arrival, billing idle energy)
 + ``run_iteration``; both halves are public so event loops can drive them
 separately.
+
+Requests reach the arrival heap by one of two paths: ``submit`` (direct
+placement, keyed by the request's own arrival time — the historical
+instant-materialization model) or ``deliver`` (the routed path: a
+:class:`repro.serving.network.NetworkModel` priced the request's network
+delivery time and the event loop hands it over on a ROUTE event). A
+request routed to this engine but still traversing the network is counted
+in ``inflight``; queue-depth telemetry (``requests_waiting``) and router
+load (``num_pending``) include it, so a zero-delay network is
+indistinguishable — bit-for-bit — from direct submit.
 """
 from __future__ import annotations
 
@@ -178,6 +188,9 @@ class InferenceEngine:
         # O(log n) per submit, FIFO among equal arrival times
         self._pending: List[Tuple[float, int, Request]] = []
         self._submit_seq = itertools.count()
+        #: requests routed to this engine but still in the network (the
+        #: router will ``deliver`` them); counted as waiting load
+        self.inflight = 0
         self.finished: List[Request] = []
 
     # ------------------------------------------------------------------
@@ -185,6 +198,16 @@ class InferenceEngine:
         for r in requests:
             heapq.heappush(self._pending,
                            (r.arrival_time, next(self._submit_seq), r))
+
+    def deliver(self, request: Request, t: float) -> None:
+        """Routed-path arrival: the network delivered ``request`` at
+        virtual time ``t`` — it becomes schedulable from ``t`` (never
+        before its own arrival time), and leaves the in-flight count."""
+        heapq.heappush(self._pending,
+                       (max(t, request.arrival_time),
+                        next(self._submit_seq), request))
+        if self.inflight > 0:
+            self.inflight -= 1
 
     def set_frequency(self, f_mhz: float) -> None:
         sp = self.hardware
@@ -209,7 +232,10 @@ class InferenceEngine:
 
     @property
     def num_pending(self) -> int:
-        return len(self._pending)
+        """Future arrivals this engine already owns: heap entries plus
+        requests still in flight through the network — so router load
+        balancing sees the same totals whichever path requests take."""
+        return len(self._pending) + self.inflight
 
     @property
     def next_arrival_time(self) -> Optional[float]:
@@ -319,7 +345,11 @@ class InferenceEngine:
         c.energy_joules_total += energy
         c.busy_seconds_total += dt
         c.requests_running = len(sched.running)
-        c.requests_waiting = len(sched.waiting) + len(self._pending)
+        # waiting = queued at the scheduler + owned-but-not-yet-ingested,
+        # wherever those live (this engine's heap or the network path) —
+        # identical totals for direct submit and zero-delay delivery
+        c.requests_waiting = (len(sched.waiting) + len(self._pending)
+                              + self.inflight)
         c.gpu_cache_usage = self.kv.usage
         c.current_frequency_mhz = self.frequency
         c.current_power_watts = power

@@ -39,9 +39,20 @@ class Request:
     cached_tokens: int = 0           # prompt tokens served from prefix cache
 
     # timing
+    #: when the routing path handed the request to its engine (None on the
+    #: direct-submit path); TTFT/E2E stay measured from ``arrival_time``,
+    #: so routing delay shows up in latency instead of vanishing
+    delivery_time: Optional[float] = None
     first_scheduled_time: Optional[float] = None
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
+
+    @property
+    def net_delay(self) -> Optional[float]:
+        """Routing-path delay (delivery - arrival); None if direct."""
+        if self.delivery_time is None:
+            return None
+        return self.delivery_time - self.arrival_time
 
     # ------------------------------------------------------------------
     @property

@@ -1,13 +1,21 @@
-"""Regenerate ``tests/golden_agft_decisions.json`` from scratch.
+"""Regenerate the committed golden AGFT decision trajectories from scratch.
 
-The golden file pins the exact AGFT decision trajectory (frequencies,
-phases, rounds, total energy, final clock) on a fixed-seed trace; the
-hot-path equivalence suite (``tests/test_vectorized_hotpath.py``) and the
-band/no-cap tests (``tests/test_hierarchy.py``) assert against it. CI's
-``golden-drift`` job runs this script in a fresh process and fails on any
-byte difference between the regenerated file and the committed one, so a
-hot-path "refactor" can't silently shift decisions while the committed
-golden keeps vouching for the old trajectory.
+Two goldens pin two scheduling semantics on the same fixed-seed trace:
+
+``golden_agft_decisions.json``        the iteration-gated trajectory
+    (policies invoked after every engine step, telemetry windows gated on
+    the engine clock) — the paper-faithful mode every hot-path refactor
+    must reproduce bit-for-bit (``tests/test_vectorized_hotpath.py``,
+    ``tests/test_hierarchy.py``, ``tests/test_network.py``)
+``golden_agft_decisions_tick.json``   the pure POLICY_TICK trajectory
+    (``policy_tick_mode="tick"``: per-node wall-clock ticks, windows cut
+    at tick time) — pinning the event-core's second scheduling mode so
+    its decision sequence can't drift silently either
+
+CI's ``golden-drift`` job runs this script in a fresh process and fails
+on any byte difference between the regenerated files and the committed
+ones, so a "refactor" can't silently shift decisions while the committed
+goldens keep vouching for the old trajectories.
 
     PYTHONPATH=src python tests/generate_golden.py            # rewrite
     PYTHONPATH=src python tests/generate_golden.py --check    # verify
@@ -22,25 +30,28 @@ import sys
 from repro.configs import get_config
 from repro.core import AGFTTuner
 from repro.energy import A6000
-from repro.serving import EngineConfig, InferenceEngine
+from repro.serving import EngineConfig, EngineNode, EventLoop, InferenceEngine
 from repro.workloads import PROTOTYPES, generate_requests
 
-GOLDEN = os.path.join(os.path.dirname(os.path.abspath(__file__)),
-                      "golden_agft_decisions.json")
+HERE = os.path.dirname(os.path.abspath(__file__))
+GOLDEN = os.path.join(HERE, "golden_agft_decisions.json")
+GOLDEN_TICK = os.path.join(HERE, "golden_agft_decisions_tick.json")
 
 #: the pinned regression trace (do not change without regenerating AND
 #: reviewing the diff — this redefines what "decision drift" means)
 TRACE = {"workload": "normal", "n": 150, "rate": 3.0, "seed": 7}
 
 
-def generate() -> dict:
+def _engine_and_tuner():
     eng = InferenceEngine(get_config("llama3-3b"), EngineConfig(),
                           initial_frequency=A6000.f_max)
     eng.submit(generate_requests(PROTOTYPES[TRACE["workload"]], TRACE["n"],
                                  base_rate=TRACE["rate"],
                                  seed=TRACE["seed"]))
-    tuner = AGFTTuner(A6000)
-    eng.drain(policy=tuner)
+    return eng, AGFTTuner(A6000)
+
+
+def _payload(eng, tuner) -> dict:
     return {
         "trace": dict(TRACE),
         "freqs": [h["freq"] for h in tuner.history],
@@ -51,32 +62,60 @@ def generate() -> dict:
     }
 
 
+def generate() -> dict:
+    """The iteration-gated trajectory (the historical golden)."""
+    eng, tuner = _engine_and_tuner()
+    eng.drain(policy=tuner)
+    return _payload(eng, tuner)
+
+
+def generate_tick() -> dict:
+    """The pure POLICY_TICK trajectory: same trace, decisions on
+    wall-clock ticks with windows cut at tick time."""
+    eng, tuner = _engine_and_tuner()
+    EventLoop([EngineNode(eng, tuner)], policy_tick_mode="tick").run()
+    out = _payload(eng, tuner)
+    out["mode"] = "tick"
+    return out
+
+
 def render(payload: dict) -> str:
-    """The exact byte encoding of the committed file (json indent=1, no
+    """The exact byte encoding of the committed files (json indent=1, no
     trailing newline) so ``--check`` / CI can compare bytes, not
     semantics."""
     return json.dumps(payload, indent=1)
 
 
+GOLDENS = (
+    (GOLDEN, generate),
+    (GOLDEN_TICK, generate_tick),
+)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--check", action="store_true",
-                    help="exit 1 if the regenerated golden differs from "
-                         "the committed file (byte comparison)")
+                    help="exit 1 if a regenerated golden differs from "
+                         "its committed file (byte comparison)")
     args = ap.parse_args()
-    fresh = render(generate())
-    if args.check:
-        with open(GOLDEN) as f:
-            committed = f.read()
-        if fresh != committed:
-            print("GOLDEN DRIFT: regenerated trajectory differs from "
-                  f"{GOLDEN}", file=sys.stderr)
-            sys.exit(1)
-        print(f"golden OK: {GOLDEN} reproduces byte-for-byte")
-        return
-    with open(GOLDEN, "w") as f:
-        f.write(fresh)
-    print(f"wrote {GOLDEN}")
+    drifted = False
+    for path, gen in GOLDENS:
+        fresh = render(gen())
+        if args.check:
+            with open(path) as f:
+                committed = f.read()
+            if fresh != committed:
+                print(f"GOLDEN DRIFT: regenerated trajectory differs "
+                      f"from {path}", file=sys.stderr)
+                drifted = True
+            else:
+                print(f"golden OK: {path} reproduces byte-for-byte")
+            continue
+        with open(path, "w") as f:
+            f.write(fresh)
+        print(f"wrote {path}")
+    if drifted:
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -19,7 +19,8 @@ from repro.energy import A6000
 from repro.policies import (BandCoordinator, FleetPowerMeter, StaticPolicy,
                             available_policies, full_busy_power_w,
                             get_policy, waterfill)
-from repro.serving import EngineConfig, EngineNode, EventLoop, InferenceEngine
+from repro.serving import (EngineConfig, EngineNode, EventLoop,
+                           InferenceEngine, NetworkModel)
 from repro.serving.cluster import ServingCluster, route_by_length
 from repro.workloads import PROTOTYPES, generate_requests
 
@@ -231,6 +232,69 @@ class TestDriverPropagation:
         assert loop.cap_violation_s == pytest.approx(loop.metered_s)
         assert loop.peak_fleet_power_w > 1.0
         assert loop.mean_fleet_power_w > 1.0
+
+
+# ---------------------------------------------------------------------------
+# Band propagation under delayed (routed) arrivals
+# ---------------------------------------------------------------------------
+
+class TestBandsUnderDelayedArrivals:
+    """PR-4 band propagation composed with the routed-ARRIVAL event path:
+    a coordinator's bands reach engines and node policies while every
+    request is still traversing the network, and forced moves are billed
+    exactly as on the instant-placement path."""
+
+    def test_initial_band_billed_while_requests_in_flight(self):
+        hw = dataclasses.replace(A6000, dvfs_transition_cost_j=5.0)
+        cl = ServingCluster(CFG, n_nodes=2, hardware=hw,
+                            with_tuners=False,
+                            fleet_policy=_StubCoordinator(
+                                [(210.0, 1200.0)] * 2),
+                            network=NetworkModel.from_spec("fixed:30"))
+        cl.submit(trace(40, seed=16))
+        # bands propagate at loop construction (t=0) — before the first
+        # ROUTE event, so every routed request is still in the network
+        loop = EventLoop(cl.nodes, fleet_policy=cl.fleet_policy,
+                         router=cl._deliveries)
+        for eng in cl.engines:
+            assert eng.inflight > 0                  # still in flight...
+            assert eng.metrics.c.freq_transitions_total == 1   # ...billed
+            assert eng.metrics.c.energy_joules_total >= 5.0
+            assert eng.frequency == 1200.0
+        loop.run()
+        assert sum(len(e.finished) for e in cl.engines) == 40
+        assert all(e.frequency <= 1200.0 for e in cl.engines)
+        assert all(e.inflight == 0 for e in cl.engines)
+
+    def test_band_reaches_tuner_with_arrivals_in_flight(self):
+        tuners = [AGFTTuner(A6000), AGFTTuner(A6000)]
+        cl = ServingCluster(CFG, n_nodes=2, policies=tuners,
+                            fleet_policy=_StubCoordinator(
+                                [(600.0, 1200.0)] * 2),
+                            network=NetworkModel.from_spec("fixed:25"))
+        cl.submit(trace(60, seed=17))
+        cl.drain()
+        assert sum(len(e.finished) for e in cl.engines) == 60
+        for t in tuners:
+            assert t.band == (600.0, 1200.0)
+            acted = [h["freq"] for h in t.history]
+            assert acted and all(600.0 <= f <= 1200.0 for f in acted)
+
+    def test_cap_metering_spans_inflight_gaps(self):
+        """The fleet meter must keep metering across windows where every
+        node is idle but deliveries are still in flight (the FLEET_TICK
+        train may not die before the network drains)."""
+        cl = ServingCluster(CFG, n_nodes=2, with_tuners=False,
+                            fleet_policy=get_policy("fleet-meter",
+                                                    power_cap_w=1.0),
+                            network=NetworkModel.from_spec("fixed:500"))
+        cl.submit(trace(30, rate=1.0, seed=18))
+        cl.drain()
+        loop = cl._loop
+        assert sum(len(e.finished) for e in cl.engines) == 30
+        assert loop.metered_s > 0.0
+        assert loop.cap_violation_s <= loop.metered_s
+        assert loop.peak_fleet_power_w > 1.0
 
 
 # ---------------------------------------------------------------------------

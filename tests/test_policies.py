@@ -12,7 +12,7 @@ import pytest
 from repro.configs import get_config
 from repro.core import AGFTTuner, TelemetryMonitor, aggregate_snapshots
 from repro.core.reward import RewardCalculator, RewardConfig
-from repro.energy import A6000
+from repro.energy import A6000, A6000_MEASURED
 from repro.energy.edp import WindowStats
 from repro.policies import (GlobalFrequencyPolicy, OndemandPolicy,
                             PowerPolicy, StaticPolicy, available_policies,
@@ -384,6 +384,67 @@ class TestSwitchingCost:
         eng.set_frequency(1200.0)               # no change: free
         assert eng.metrics.c.energy_joules_total == e0 + 5.0
         assert eng.metrics.c.freq_transitions_total == 1
+
+
+# ---------------------------------------------------------------------------
+# Calibrated A6000 transition costs (satellite; ROADMAP measured-billing)
+# ---------------------------------------------------------------------------
+
+class TestMeasuredTransitionSpec:
+    def test_calibration_prices_transitions_without_touching_physics(self):
+        assert A6000_MEASURED.dvfs_transition_cost_j > 0.0
+        assert A6000_MEASURED.dvfs_transition_s > 0.0
+        # same silicon otherwise: the envelope and power model match A6000
+        for field in ("f_min", "f_max", "f_step", "peak_flops", "mem_bw",
+                      "p_idle", "p_static_active", "p_dyn_compute",
+                      "p_dyn_memory", "alpha"):
+            assert getattr(A6000_MEASURED, field) == getattr(A6000, field)
+
+    def test_one_transition_bills_energy_and_stall_time(self):
+        eng = InferenceEngine(CFG, EngineConfig(),
+                              hardware=A6000_MEASURED,
+                              initial_frequency=A6000_MEASURED.f_max)
+        e0, t0 = eng.metrics.c.energy_joules_total, eng.clock
+        eng.set_frequency(1200.0)
+        c = eng.metrics.c
+        assert c.energy_joules_total == pytest.approx(
+            e0 + A6000_MEASURED.dvfs_transition_cost_j)
+        assert eng.clock == pytest.approx(
+            t0 + A6000_MEASURED.dvfs_transition_s)
+        assert c.freq_transitions_total == 1
+
+    def test_transitions_show_up_in_measured_energy_not_just_reward(self):
+        """Same trace, same single-actuation policy, transition cost as
+        the only difference: the cost-priced run's measured energy is
+        exactly one billed transition higher."""
+        hw_cost = dataclasses.replace(
+            A6000,
+            dvfs_transition_cost_j=A6000_MEASURED.dvfs_transition_cost_j)
+
+        def served(hw):
+            eng = InferenceEngine(CFG, EngineConfig(), hardware=hw,
+                                  initial_frequency=hw.f_max)
+            eng.submit(trace(60, seed=35))
+            eng.drain(policy=StaticPolicy(hw, frequency_mhz=1200.0))
+            assert eng.metrics.c.freq_transitions_total == 1
+            return eng.metrics.c.energy_joules_total
+        free, priced = served(A6000), served(hw_cost)
+        assert priced == pytest.approx(
+            free + A6000_MEASURED.dvfs_transition_cost_j)
+
+    def test_agft_on_measured_spec_pays_for_its_switching(self):
+        eng = InferenceEngine(CFG, EngineConfig(),
+                              hardware=A6000_MEASURED,
+                              initial_frequency=A6000_MEASURED.f_max)
+        eng.submit(trace(120, seed=36))
+        tuner = get_policy("agft", hardware=A6000_MEASURED)
+        eng.drain(policy=tuner)
+        c = eng.metrics.c
+        assert len(eng.finished) == 120
+        assert c.freq_transitions_total > 0
+        # every actuated change was billed into the measured counter
+        assert c.energy_joules_total \
+            > c.freq_transitions_total * A6000_MEASURED.dvfs_transition_cost_j
 
 
 # ---------------------------------------------------------------------------

@@ -17,7 +17,9 @@ from repro.energy.edp import WindowStats                     # noqa: E402
 from repro.configs import get_config                         # noqa: E402
 from repro.core.features import FeatureExtractor             # noqa: E402
 from repro.serving import (EngineConfig, EngineNode, EventLoop,  # noqa: E402
-                           InferenceEngine, PagedKVCache)
+                           InferenceEngine, NetworkConfig, NetworkModel,
+                           PagedKVCache)
+from repro.serving.cluster import ServingCluster             # noqa: E402
 from repro.serving.request import Request                    # noqa: E402
 from repro.workloads import PROTOTYPES, generate_requests    # noqa: E402
 from repro.workloads.azure_trace import generate_azure_trace  # noqa: E402
@@ -185,6 +187,88 @@ class TestEventOrderingProperties:
             assert all(a <= b for a, b in zip(series, series[1:]))
         for node in nodes:
             assert not node.engine.has_work         # everything drained
+
+
+class TestNetworkRoutingProperties:
+    """ARRIVAL rescheduling through the router event source must keep
+    every clock monotone (no same-node reordering, no time travel),
+    deliver every request, and — at zero delay — be byte-identical to
+    direct submit."""
+
+    CFG = get_config("llama3-3b")
+
+    def _routed_cluster(self, n_nodes, seed, net, policies=None,
+                        n_requests=25, rate=3.0):
+        cl = ServingCluster(self.CFG, n_nodes=n_nodes, with_tuners=False,
+                            policies=policies, network=net)
+        cl.submit(generate_requests(PROTOTYPES["normal"], n_requests,
+                                    base_rate=rate, seed=seed))
+        return cl
+
+    @given(n_nodes=st.integers(1, 3), seed=st.integers(0, 500),
+           delay_ms=st.floats(0.0, 60.0), rate=st.floats(0.5, 6.0))
+    @settings(max_examples=12, deadline=None)
+    def test_rescheduled_arrivals_never_time_travel(self, n_nodes, seed,
+                                                    delay_ms, rate):
+        clocks = {}
+
+        class Probe:
+            def __init__(self, idx):
+                self.idx = idx
+
+            def maybe_act(self, engine):
+                clocks.setdefault(self.idx, []).append(engine.clock)
+                return None
+
+        net = NetworkModel(NetworkConfig(hop_latency_s=delay_ms * 1e-3 / 2,
+                                         router_service_s=1e-4,
+                                         distribution="lognormal",
+                                         jitter=0.3), seed=seed)
+        cl = self._routed_cluster(n_nodes, seed, net,
+                                  policies=[Probe(i)
+                                            for i in range(n_nodes)],
+                                  rate=rate)
+        loop = EventLoop(cl.nodes, router=cl._deliveries)
+        nows = []
+        orig_push = loop._push
+
+        def push_probe(t, kind, node):
+            nows.append(loop.now)
+            orig_push(t, kind, node)
+        loop._push = push_probe
+        loop.run()
+
+        assert nows == sorted(nows)              # virtual time monotone
+        for series in clocks.values():           # per-node event monotone
+            assert all(a <= b for a, b in zip(series, series[1:]))
+        fin = [r for e in cl.engines for r in e.finished]
+        assert len(fin) == 25                    # every delivery landed
+        for r in fin:
+            assert r.delivery_time >= r.arrival_time
+            # never scheduled before the network handed it over
+            assert r.first_scheduled_time >= r.delivery_time - 1e-12
+        assert all(e.inflight == 0 for e in cl.engines)
+        assert not cl.has_work
+
+    @given(n_nodes=st.integers(1, 3), seed=st.integers(0, 500))
+    @settings(max_examples=8, deadline=None)
+    def test_zero_delay_network_byte_identical_to_direct(self, n_nodes,
+                                                         seed):
+        def state(net):
+            cl = self._routed_cluster(n_nodes, seed, net,
+                                      policies=["agft"] * n_nodes)
+            steps = cl.drain()
+            return {
+                "steps": steps,
+                "clocks": [e.clock for e in cl.engines],
+                "energies": [e.metrics.c.energy_joules_total
+                             for e in cl.engines],
+                "finished": [len(e.finished) for e in cl.engines],
+                "histories": [[(h["t"], h["freq"], h["phase"])
+                               for h in p.history]
+                              for p in cl.policies],
+            }
+        assert state(None) == state(NetworkModel())
 
 
 class TestFeatureProperties:
