@@ -95,6 +95,16 @@ def _tab_fleet(quick):
                  f"tiered_mix_ttft{m['ttft_s']:+.1f}%")
 
 
+def _megafleet(quick):
+    from benchmarks.tab_megafleet import measure_batched
+    out = measure_batched(60 if quick else 250,
+                          600.0 if quick else 1800.0, 0.1, 0)
+    # us_per_step is a host-us-per-simulated-iteration metric, so the
+    # --check 2x gate covers the batched fleet core automatically
+    return (out["us_per_step"],
+            f"node_iters_per_s={out['node_iterations_per_sec']:.0f}")
+
+
 def _roofline(quick):
     from benchmarks.roofline import run
     try:
@@ -231,6 +241,7 @@ GRID = [
                                 "reduce": _powercap_reduce}),
     ("tab_network_delay_grid", {"units": _network_units,
                                 "reduce": _network_reduce}),
+    ("tab_megafleet_batched", _mono(_megafleet)),
     ("roofline_terms", _mono(_roofline)),
 ]
 
@@ -296,9 +307,36 @@ def _finalize(run: _BenchRun, quick: bool, rows: Dict, outputs: Dict) -> None:
     outputs[run.name] = out
 
 
+def _profile_units(run: "_BenchRun", units: List) -> List[Dict]:
+    """Run a benchmark's DAG units under one cProfile session and dump
+    the aggregated stats to ``results/profile_<benchmark>.txt``."""
+    import cProfile
+    import pstats
+
+    from benchmarks.common import results_path
+    pr = cProfile.Profile()
+    pr.enable()
+    try:
+        results = [_run_unit(fn, args, seed) for fn, args, seed in units]
+    finally:
+        pr.disable()
+    path = results_path(f"profile_{run.name}.txt")
+    with open(path, "w") as f:
+        f.write(f"# cProfile of {len(units)} unit(s) of {run.name}\n")
+        st = pstats.Stats(pr, stream=f)
+        st.sort_stats("cumulative").print_stats(80)
+        st.sort_stats("tottime").print_stats(40)
+    print(f"# wrote {path}", file=sys.stderr)
+    return results
+
+
 def run_suite(quick: bool = False, only: str = "",
-              jobs: Optional[int] = None) -> Dict:
-    """Run the benchmark DAG; returns the perf_baseline.json payload."""
+              jobs: Optional[int] = None, profile: str = "") -> Dict:
+    """Run the benchmark DAG; returns the perf_baseline.json payload.
+
+    ``profile`` is a benchmark-name substring: matching benchmarks have
+    their units wrapped in cProfile (serial path only — ``main`` forces
+    ``--jobs 1`` so the profiler sees the work)."""
     jobs = default_jobs() if jobs is None else jobs
     selected = {n: s for n, s in GRID if not only or only in n}
     runs = {n: _BenchRun(n, s) for n, s in selected.items()}
@@ -335,8 +373,11 @@ def run_suite(quick: bool = False, only: str = "",
                     except Exception as e:  # noqa: BLE001
                         run.results = [{"wall_s": 0.0, "error": str(e)}]
                     else:
-                        run.results = [_run_unit(fn, args, seed)
-                                       for fn, args, seed in units]
+                        if profile and profile in run.name:
+                            run.results = _profile_units(run, units)
+                        else:
+                            run.results = [_run_unit(fn, args, seed)
+                                           for fn, args, seed in units]
                     _finalize(run, quick, rows, outputs)
                     remaining.remove(run)
                 if not progressed:   # unsatisfiable deps (shouldn't happen)
@@ -434,7 +475,15 @@ def main() -> None:
     ap.add_argument("--check", action="store_true",
                     help="fail if us_per_call regressed >2x vs the "
                          "committed results/perf_baseline.json")
+    ap.add_argument("--profile", default="",
+                    help="benchmark-name substring: wrap matching DAG "
+                         "units in cProfile and write "
+                         "results/profile_<benchmark>.txt (forces "
+                         "--jobs 1; timings are skewed, so the baseline "
+                         "file is not rewritten)")
     args = ap.parse_args()
+    if args.profile:
+        args.jobs = 1
 
     baseline = None
     if args.check:
@@ -444,7 +493,8 @@ def main() -> None:
             print("no committed perf baseline; writing a fresh one",
                   file=sys.stderr)
 
-    payload = run_suite(quick=args.quick, only=args.only, jobs=args.jobs)
+    payload = run_suite(quick=args.quick, only=args.only, jobs=args.jobs,
+                        profile=args.profile)
     print("name,us_per_call,derived")
     for name, row in payload["benchmarks"].items():
         print(f"{name},{row['us_per_call']:.1f},{row['derived']}")
@@ -458,8 +508,8 @@ def main() -> None:
         }
         if "comparison" in baseline:
             payload["comparison"] = baseline["comparison"]
-    if not args.only:
-        # a filtered run must not gut the committed full-suite baseline
+    if not args.only and not args.profile:
+        # a filtered or profiled run must not gut the committed baseline
         save_json(PERF_BASELINE, payload)
 
     if args.check and baseline is not None:

@@ -1,0 +1,221 @@
+"""Mega-fleet replay: batched SoA fleet stepping vs the per-event loop.
+
+Replays an Azure-trace day across a 1000-node fleet with
+``ServingCluster(step_mode="batched")`` and reports throughput as
+**node-iterations/sec** — simulated engine iterations summed over all
+nodes, per host wall-second. The per-event baseline is measured on a
+short prefix slice of the same workload and extrapolated by its
+host-us-per-iteration cost times the replay's total iteration count.
+That extrapolation is exact in iteration count (the two backends execute
+bit-identical trajectories — see ``tests/test_fleet_step.py`` — so the
+slice's per-iteration cost is priced against the very same step stream)
+and conservative in per-step cost: the slice is the cold-cache start of
+the day, where the event loop spends *less* time per iteration than in
+the KV-pressured steady state.
+
+Both backends run the same throughput-oriented engine configuration
+(``ENGINE_CFG``): identical KV token capacity to the default config, but
+coarser 128-token blocks (8x fewer Python-level block walks per request
+in the prefix-cache paths) and single-chunk prefill for typical Azure
+prompts. Request placement is O(1) round-robin over arrival order so
+router cost does not pollute either backend's drain timing.
+
+  PYTHONPATH=src python -m benchmarks.tab_megafleet            # day replay
+  PYTHONPATH=src python -m benchmarks.tab_megafleet --quick    # CI smoke
+  PYTHONPATH=src python -m benchmarks.tab_megafleet --quick --check
+
+``--check`` compares the run's node-iterations/sec against the committed
+``results/tab_megafleet.json`` for the same mode and fails on a >2x
+regression (the CI perf-smoke gate).
+"""
+from __future__ import annotations
+
+import argparse
+import gc
+import sys
+import time
+from typing import Dict, List
+
+from benchmarks.common import PAPER_MODEL, load_json, save_json
+from repro.configs import get_config
+from repro.serving.cluster import ServingCluster
+from repro.serving.engine import EngineConfig
+from repro.workloads import generate_azure_trace
+
+ARTIFACT = "tab_megafleet.json"
+DAY_S = 86400.0
+CHECK_MAX_REGRESSION = 2.0
+
+# Same 65536-token KV capacity as the default EngineConfig (4096 x 16),
+# restated in 128-token blocks; prefill_chunk matches max_batched_tokens
+# so a typical Azure prompt prefills in one iteration on both backends.
+ENGINE_CFG = EngineConfig(num_kv_blocks=512, kv_block_size=128,
+                          prefill_chunk=2048)
+
+
+# ---------------------------------------------------------------------------
+def build_fleet(n_nodes: int, duration_s: float, rate_per_node: float,
+                seed: int, step_mode: str = "batched") -> ServingCluster:
+    """Fleet + submitted trace. Round-robin placement over arrival order:
+    O(1) per request, identical assignment for both backends."""
+    cl = ServingCluster(get_config(PAPER_MODEL), n_nodes=n_nodes,
+                        engine_cfg=ENGINE_CFG, step_mode=step_mode,
+                        batched_record_history=False)
+    reqs = generate_azure_trace(duration_s,
+                                base_rate=rate_per_node * n_nodes,
+                                seed=seed)
+    reqs.sort(key=lambda r: r.arrival_time)
+    for i, r in enumerate(reqs):
+        cl.nodes[i % n_nodes].engine.submit([r])
+    cl._n_submitted = len(reqs)
+    return cl
+
+
+MAX_ITERS = 2_000_000_000   # a day replay runs ~270M iterations; the
+                            # default drain budget (10M) would truncate it
+
+
+def _drain_timed(cl: ServingCluster) -> Dict:
+    """Drain with GC parked (both backends get the same treatment: a
+    multi-million-object fleet makes collector sweeps the top cost of
+    whichever backend runs second)."""
+    was_enabled = gc.isenabled()
+    gc.collect()
+    gc.disable()
+    try:
+        t0 = time.perf_counter()
+        steps = cl.drain(max_iters=MAX_ITERS)
+        wall = time.perf_counter() - t0
+    finally:
+        if was_enabled:
+            gc.enable()
+    return {"steps": int(steps), "wall_s": wall,
+            "us_per_step": 1e6 * wall / max(steps, 1),
+            "node_iterations_per_sec": steps / wall if wall > 0 else 0.0}
+
+
+def measure_batched(n_nodes: int, duration_s: float, rate_per_node: float,
+                    seed: int) -> Dict:
+    cl = build_fleet(n_nodes, duration_s, rate_per_node, seed, "batched")
+    out = _drain_timed(cl)
+    out["requests"] = cl._n_submitted
+    return out
+
+
+def measure_event_slice(n_nodes: int, slice_s: float, rate_per_node: float,
+                        seed: int) -> Dict:
+    """Event-loop cost on the day's first ``slice_s`` seconds of arrivals
+    (same trace generator, same seed, same placement), drained to empty."""
+    cl = build_fleet(n_nodes, slice_s, rate_per_node, seed, "event")
+    out = _drain_timed(cl)
+    out["sim_s"] = slice_s
+    out["requests"] = cl._n_submitted
+    return out
+
+
+# ---------------------------------------------------------------------------
+def run(n_nodes: int = 1000, duration_s: float = DAY_S,
+        rate_per_node: float = 0.05, event_slice_s: float = 600.0,
+        seed: int = 0, quiet: bool = False) -> Dict:
+    log = (lambda *a: None) if quiet else print
+    log(f"[megafleet] event-loop slice: {n_nodes} nodes x "
+        f"{event_slice_s:.0f}s @ {rate_per_node}/node/s")
+    ev = measure_event_slice(n_nodes, event_slice_s, rate_per_node, seed)
+    log(f"[megafleet]   {ev['steps']} iterations in {ev['wall_s']:.1f}s "
+        f"({ev['us_per_step']:.2f} us/iter)")
+    log(f"[megafleet] batched replay: {n_nodes} nodes x {duration_s:.0f}s")
+    bt = measure_batched(n_nodes, duration_s, rate_per_node, seed)
+    log(f"[megafleet]   {bt['steps']} iterations in {bt['wall_s']:.1f}s "
+        f"({bt['us_per_step']:.2f} us/iter, "
+        f"{bt['node_iterations_per_sec']:.0f} node-iters/s)")
+    extrap = ev["us_per_step"] * bt["steps"] * 1e-6
+    speedup = extrap / bt["wall_s"] if bt["wall_s"] > 0 else float("inf")
+    log(f"[megafleet] extrapolated event-loop replay: {extrap:.0f}s "
+        f"-> speedup {speedup:.1f}x")
+    return {
+        "n_nodes": n_nodes,
+        "duration_s": duration_s,
+        "rate_per_node": rate_per_node,
+        "requests": bt.pop("requests"),
+        "engine_cfg": {"num_kv_blocks": ENGINE_CFG.num_kv_blocks,
+                       "kv_block_size": ENGINE_CFG.kv_block_size,
+                       "prefill_chunk": ENGINE_CFG.prefill_chunk},
+        "batched": bt,
+        "event_slice": ev,
+        "extrapolated_event_wall_s": extrap,
+        "speedup_vs_event": speedup,
+    }
+
+
+# ---------------------------------------------------------------------------
+def _check(payload: Dict, mode: str) -> List[str]:
+    """>2x node-iterations/sec regression vs the committed artifact."""
+    try:
+        ref = load_json(ARTIFACT).get(mode)
+    except (FileNotFoundError, ValueError):
+        return []
+    if not ref:
+        return []
+    cur = payload["batched"]["node_iterations_per_sec"]
+    base = ref["batched"]["node_iterations_per_sec"]
+    if cur * CHECK_MAX_REGRESSION < base:
+        return [f"megafleet[{mode}]: {cur:.0f} node-iters/s < "
+                f"1/{CHECK_MAX_REGRESSION}x baseline {base:.0f}"]
+    return []
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: 100 nodes, 900s slice of the day")
+    ap.add_argument("--nodes", type=int, default=None)
+    ap.add_argument("--duration", type=float, default=None)
+    ap.add_argument("--rate", type=float, default=None,
+                    help="requests per node per second")
+    ap.add_argument("--event-slice", type=float, default=None,
+                    help="seconds of the workload timed under the "
+                         "per-event loop for the extrapolation")
+    ap.add_argument("--check", action="store_true",
+                    help="fail on >2x node-iterations/sec regression vs "
+                         "committed results/tab_megafleet.json")
+    args = ap.parse_args()
+
+    if args.quick:
+        defaults = dict(n_nodes=100, duration_s=900.0, rate_per_node=0.1,
+                        event_slice_s=120.0)
+    else:
+        defaults = dict(n_nodes=1000, duration_s=DAY_S, rate_per_node=0.05,
+                        event_slice_s=600.0)
+    if args.nodes is not None:
+        defaults["n_nodes"] = args.nodes
+    if args.duration is not None:
+        defaults["duration_s"] = args.duration
+    if args.rate is not None:
+        defaults["rate_per_node"] = args.rate
+    if args.event_slice is not None:
+        defaults["event_slice_s"] = args.event_slice
+
+    payload = run(**defaults)
+    mode = "quick" if args.quick else "day"
+
+    # merge into the committed artifact: a quick run must not clobber the
+    # day-replay numbers (and vice versa)
+    try:
+        artifact = load_json(ARTIFACT)
+    except (FileNotFoundError, ValueError):
+        artifact = {}
+    artifact[mode] = payload
+    save_json(ARTIFACT, artifact)
+
+    if args.check:
+        failures = _check(payload, mode)
+        if failures:
+            print("PERF CHECK FAILED:\n  " + "\n  ".join(failures),
+                  file=sys.stderr)
+            sys.exit(1)
+        print("megafleet perf check passed vs committed artifact",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

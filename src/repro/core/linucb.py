@@ -29,6 +29,7 @@ selection path is byte-for-byte the unmasked code.
 """
 from __future__ import annotations
 
+import bisect
 from collections.abc import Mapping
 from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
@@ -423,3 +424,322 @@ class LinUCBBank:
         mean_edp = np.full(len(self._f), np.inf)
         np.divide(self._edp_sum, self._n, out=mean_edp, where=mask)
         return self._f[int(np.argmin(mean_edp))]
+
+
+# ---------------------------------------------------------------------------
+# Stacked banks: one more SoA level — (n_nodes, n_slots, ...) — so a fleet of
+# per-node LinUCB banks selects and updates in single numpy dispatches.
+# ---------------------------------------------------------------------------
+
+class _StackedArmView:
+    """``LinUCBArm``-compatible view of one (node, frequency) row of a
+    :class:`StackedBanks` — resolved live, like :class:`_ArmView`."""
+
+    __slots__ = ("_banks", "_node", "f")
+
+    def __init__(self, banks: "StackedBanks", node: int, f: float):
+        self._banks = banks
+        self._node = node
+        self.f = f
+
+    @property
+    def _s(self) -> int:
+        s = self._banks.slot_of(self._node, self.f)
+        if s < 0:
+            raise KeyError(self.f)
+        return s
+
+    @property
+    def n(self) -> int:
+        return int(self._banks.n_[self._node, self._s])
+
+    @property
+    def reward_sum(self) -> float:
+        return float(self._banks.reward_sum[self._node, self._s])
+
+    @property
+    def edp_sum(self) -> float:
+        return float(self._banks.edp_sum[self._node, self._s])
+
+    @property
+    def mean_reward(self) -> float:
+        n = self.n
+        return self.reward_sum / n if n else 0.0
+
+    @property
+    def mean_edp(self) -> float:
+        n = self.n
+        return self.edp_sum / n if n else float("inf")
+
+
+class _StackedArmMap(Mapping):
+    """Read-only ``frequency -> _StackedArmView`` mapping for one node of a
+    :class:`StackedBanks` (ascending-frequency iteration order) — the
+    interface :class:`repro.core.pruning.PruningFramework` walks."""
+
+    __slots__ = ("_banks", "_node")
+
+    def __init__(self, banks: "StackedBanks", node: int):
+        self._banks = banks
+        self._node = node
+
+    def __getitem__(self, f) -> _StackedArmView:
+        f = float(f)
+        if self._banks.slot_of(self._node, f) < 0:
+            raise KeyError(f)
+        return _StackedArmView(self._banks, self._node, f)
+
+    def __iter__(self) -> Iterator[float]:
+        return iter(self._banks.node_frequencies(self._node))
+
+    def __len__(self) -> int:
+        return int(self._banks.m[self._node])
+
+    def __contains__(self, f) -> bool:
+        return self._banks.slot_of(self._node, float(f)) >= 0
+
+
+class StackedBankView:
+    """``LinUCBBank``-compatible facade over ONE node of a
+    :class:`StackedBanks` — the adapter through which the unchanged
+    per-node pruning/refinement frameworks mutate the stack. Every method
+    reproduces the corresponding ``LinUCBBank`` arithmetic on this node's
+    row slices (same expressions, same numpy calls on the same logical
+    shapes), so a framework acting through the view is bit-identical to
+    one acting on a standalone bank."""
+
+    __slots__ = ("_banks", "_node", "arms", "band")
+
+    def __init__(self, banks: "StackedBanks", node: int):
+        self._banks = banks
+        self._node = node
+        self.arms = _StackedArmMap(banks, node)
+        self.band = None                      # stacked path: no fleet bands
+
+    @property
+    def frequencies(self) -> List[float]:
+        return self._banks.node_frequencies(self._node)
+
+    def is_legal(self, f: float) -> bool:
+        return True
+
+    def n_legal(self) -> int:
+        return int(self._banks.m[self._node])
+
+    def remove(self, f: float) -> None:
+        self._banks.remove(self._node, f)
+
+    def rebuild(self, frequencies: Sequence[float],
+                warm_from: Optional[float] = None) -> None:
+        self._banks.rebuild(self._node, frequencies, warm_from)
+
+    def best_historical(self, min_samples: int = 1) -> Optional[float]:
+        return self._banks.best_historical(self._node, min_samples)
+
+    def argmax_ucb(self, x: np.ndarray, alpha: float) -> float:
+        return self._banks.argmax_ucb(self._node, x, alpha)
+
+
+class StackedBanks:
+    """A fleet of per-node LinUCB banks stored as one more SoA level:
+    ``(n_nodes, capacity, ...)`` stacks with per-node active-slot counts.
+
+    Invariants per node ``i``: slots ``[0, m[i])`` hold the live arms in
+    ascending-frequency order (matching ``LinUCBBank._f``); dead slots keep
+    pristine ridge statistics (finite values, so batched selection over the
+    full ``capacity`` axis stays NaN-free and is masked afterwards).
+
+    Batched operations use only ops verified bit-identical to the scalar
+    bank's: ``einsum('ki,kj->kij')`` for outers, batched ``matmul`` for
+    gemv/dot (NOT ``einsum('ki,ki->k')``, whose reduction order differs
+    from BLAS ddot), and the quad form ``einsum('ki,kaij,kj->ka')``.
+    Per-node mutation (``remove``/``rebuild``, driven by the unchanged
+    pruning/refinement frameworks through :class:`StackedBankView`) edits
+    row slices in place.
+    """
+
+    def __init__(self, n_nodes: int, frequencies: Sequence[float], dim: int,
+                 ridge: float = 1.0, capacity: Optional[int] = None):
+        freqs = sorted({float(f) for f in frequencies})
+        self.n_nodes = n_nodes
+        self.dim = dim
+        self.ridge = ridge
+        K = capacity or max(len(freqs) + 4, 24)
+        if K < len(freqs):
+            raise ValueError(f"capacity {K} < initial arms {len(freqs)}")
+        self.capacity = K
+        d = dim
+        self._eye_A = np.eye(d) * ridge
+        self._eye_Ainv = np.eye(d) / ridge
+        self.freqs = np.full((n_nodes, K), np.inf)
+        self.freqs[:, :len(freqs)] = freqs
+        self.m = np.full(n_nodes, len(freqs), dtype=np.int64)
+        self.A = np.broadcast_to(self._eye_A, (n_nodes, K, d, d)).copy()
+        self.A_inv = np.broadcast_to(self._eye_Ainv, (n_nodes, K, d, d)).copy()
+        self.b = np.zeros((n_nodes, K, d))
+        self.theta = np.zeros((n_nodes, K, d))
+        self.n_ = np.zeros((n_nodes, K), dtype=np.int64)
+        self.reward_sum = np.zeros((n_nodes, K))
+        self.edp_sum = np.zeros((n_nodes, K))
+        # per-node active-frequency lists, memoised for the scalar
+        # adapters (pruning walks resolve slots thousands of times per
+        # mutation); invalidated by _reset_slot/remove/rebuild
+        self._flist: Dict[int, List[float]] = {}
+
+    # -- per-node introspection ----------------------------------------
+    def _freq_list(self, i: int) -> List[float]:
+        fl = self._flist.get(i)
+        if fl is None:
+            fl = self.freqs[i, :self.m[i]].tolist()
+            self._flist[i] = fl
+        return fl
+
+    def node_frequencies(self, i: int) -> List[float]:
+        return list(self._freq_list(i))
+
+    def slot_of(self, i: int, f: float) -> int:
+        """Active slot holding frequency ``f`` on node ``i``; -1 if absent."""
+        row = self._freq_list(i)
+        s = bisect.bisect_left(row, f)
+        if s < len(row) and row[s] == f:
+            return s
+        return -1
+
+    def view(self, i: int) -> StackedBankView:
+        return StackedBankView(self, i)
+
+    # -- vectorized slot resolution ------------------------------------
+    def slots_for(self, idx: np.ndarray, fs: np.ndarray) -> np.ndarray:
+        """For each (node, frequency) pair: its active slot, or -1 when the
+        frequency is no longer in that node's action space (pruned or
+        dropped by a rebuild — the ``bank.arms.get(...) is None`` case)."""
+        rows = self.freqs[idx]                              # (k, K)
+        slots = np.sum(rows < fs[:, None], axis=1)
+        k = len(idx)
+        hit = np.zeros(k, dtype=bool)
+        in_range = slots < self.capacity
+        safe = np.where(in_range, slots, 0)
+        hit = in_range & (rows[np.arange(k), safe] == fs) \
+            & (safe < self.m[idx])
+        return np.where(hit, safe, -1)
+
+    # -- batched update (Sherman-Morrison) -----------------------------
+    def update_rows(self, nodes: np.ndarray, slots: np.ndarray,
+                    X: np.ndarray, rewards: np.ndarray,
+                    edps: np.ndarray) -> None:
+        """Credit one observation to one arm per node, all nodes at once.
+        Arithmetic-identical to ``LinUCBBank.update_arm`` row by row."""
+        sel = (nodes, slots)
+        self.A[sel] += np.einsum("ki,kj->kij", X, X)
+        Ainv = self.A_inv[sel]
+        Ax = np.matmul(Ainv, X[:, :, None])[:, :, 0]
+        denom = 1.0 + np.matmul(X[:, None, :], Ax[:, :, None])[:, 0, 0]
+        Ainv -= np.einsum("ki,kj->kij", Ax, Ax) / denom[:, None, None]
+        self.A_inv[sel] = Ainv
+        bsel = self.b[sel]
+        bsel += rewards[:, None] * X
+        self.b[sel] = bsel
+        self.theta[sel] = np.matmul(Ainv, bsel[:, :, None])[:, :, 0]
+        self.n_[sel] += 1
+        self.reward_sum[sel] += rewards
+        self.edp_sum[sel] += edps
+
+    # -- batched selection ---------------------------------------------
+    def select_batch(self, idx: np.ndarray, X: np.ndarray, alpha: float,
+                     greedy: np.ndarray):
+        """Per-node arm choice: ``select_greedy`` where ``greedy`` is set,
+        ``select_ucb`` (untried-first, then UCB argmax) elsewhere. Returns
+        ``(slots, freqs)``. First-max argmax over ascending active slots
+        reproduces the scalar banks' lowest-frequency tie-break."""
+        k = len(idx)
+        K = self.capacity
+        valid = np.arange(K)[None, :] < self.m[idx][:, None]
+        theta = self.theta[idx]
+        tx = np.matmul(theta, X[:, :, None])[:, :, 0]
+        quad = np.einsum("ki,kaij,kj->ka", X, self.A_inv[idx], X)
+        ucb = tx + alpha * np.sqrt(np.maximum(quad, 0.0))
+        scores = np.where(greedy[:, None], tx, ucb)
+        scores = np.where(valid, scores, -np.inf)
+        slot = np.argmax(scores, axis=1)
+        untried = valid & (self.n_[idx] == 0)
+        has_u = untried.any(axis=1) & ~greedy
+        slot = np.where(has_u, np.argmax(untried, axis=1), slot)
+        return slot, self.freqs[idx, slot]
+
+    # -- per-node mutation (pruning / refinement path) -----------------
+    def _reset_slot(self, i: int, s: int) -> None:
+        self._flist.pop(i, None)
+        self.freqs[i, s] = np.inf
+        self.A[i, s] = self._eye_A
+        self.A_inv[i, s] = self._eye_Ainv
+        self.b[i, s] = 0.0
+        self.theta[i, s] = 0.0
+        self.n_[i, s] = 0
+        self.reward_sum[i, s] = 0.0
+        self.edp_sum[i, s] = 0.0
+
+    def remove(self, i: int, f: float) -> None:
+        s = self.slot_of(i, float(f))
+        if s < 0:
+            return
+        m = int(self.m[i])
+        for arr in (self.freqs, self.n_, self.reward_sum, self.edp_sum,
+                    self.A, self.A_inv, self.b, self.theta):
+            arr[i, s:m - 1] = arr[i, s + 1:m]
+        self.m[i] = m - 1
+        self._reset_slot(i, m - 1)
+
+    def rebuild(self, i: int, frequencies: Sequence[float],
+                warm_from: Optional[float] = None) -> None:
+        """Per-node ``LinUCBBank.rebuild``: surviving frequencies keep their
+        rows, new frequencies warm-start from the anchor (skipped when the
+        anchor was never sampled)."""
+        new = sorted({float(f) for f in frequencies})
+        if len(new) > self.capacity:
+            raise ValueError(f"rebuild wants {len(new)} arms, "
+                             f"capacity {self.capacity}")
+        m = int(self.m[i])
+        old_f = [float(f) for f in self.freqs[i, :m]]
+        old_index = {f: s for s, f in enumerate(old_f)}
+        old = (self.A[i, :m].copy(), self.A_inv[i, :m].copy(),
+               self.b[i, :m].copy(), self.theta[i, :m].copy(),
+               self.n_[i, :m].copy(), self.reward_sum[i, :m].copy(),
+               self.edp_sum[i, :m].copy())
+        proto = old_index.get(float(warm_from)) if warm_from is not None \
+            else None
+        if proto is not None and old[4][proto] == 0:
+            proto = None                      # untouched anchor: no prior
+        for s in range(self.capacity):
+            self._reset_slot(i, s)
+        self.freqs[i, :len(new)] = new
+        self.m[i] = len(new)
+        for s, f in enumerate(new):
+            src = old_index.get(f, proto)
+            if src is None:
+                continue
+            self.A[i, s] = old[0][src]
+            self.A_inv[i, s] = old[1][src]
+            self.b[i, s] = old[2][src]
+            self.theta[i, s] = old[3][src]
+            self.n_[i, s] = old[4][src]
+            self.reward_sum[i, s] = old[5][src]
+            self.edp_sum[i, s] = old[6][src]
+
+    # -- per-node selection helpers (refinement anchors) ---------------
+    def best_historical(self, i: int, min_samples: int = 1
+                        ) -> Optional[float]:
+        m = int(self.m[i])
+        mask = self.n_[i, :m] >= min_samples
+        if not mask.any():
+            return None
+        mean_edp = np.full(m, np.inf)
+        np.divide(self.edp_sum[i, :m], self.n_[i, :m], out=mean_edp,
+                  where=mask)
+        return float(self.freqs[i, int(np.argmin(mean_edp))])
+
+    def argmax_ucb(self, i: int, x: np.ndarray, alpha: float) -> float:
+        m = int(self.m[i])
+        quad = np.einsum("i,aij,j->a", x, self.A_inv[i, :m], x)
+        scores = self.theta[i, :m] @ x \
+            + alpha * np.sqrt(np.maximum(quad, 0.0))
+        return float(self.freqs[i, int(np.argmax(scores))])

@@ -19,6 +19,8 @@ from __future__ import annotations
 
 from typing import Dict, Optional, Sequence
 
+import numpy as np
+
 from repro.energy.edp import WindowStats, diff_snapshots
 
 #: snapshot keys that are point-in-time *levels* shared across the fleet —
@@ -36,13 +38,21 @@ def aggregate_snapshots(snaps: Sequence[Dict[str, float]]
     frequency levels average. The result is shaped exactly like a single
     engine's ``snapshot()``, so ``diff_snapshots`` and every policy built
     on :class:`TelemetryMonitor` consume it unchanged.
+
+    The fold is one numpy axis-0 reduction over an ``(n_nodes, n_keys)``
+    matrix. Axis-0 reduction accumulates rows sequentially (numpy's
+    pairwise summation applies along the contiguous inner axis only), so
+    the totals are bit-identical to the historical per-key Python ``sum``
+    at any fleet size.
     """
     if not snaps:
         return {}
+    keys = list(snaps[0])
+    mat = np.array([[s[k] for k in keys] for s in snaps], dtype=np.float64)
+    tot = np.sum(mat, axis=0)
     n = len(snaps)
-    return {k: (sum(s[k] for s in snaps) / n if k in _MEAN_KEYS
-                else sum(s[k] for s in snaps))
-            for k in snaps[0]}
+    return {k: (tot[i] / n if k in _MEAN_KEYS else tot[i])
+            for i, k in enumerate(keys)}
 
 
 class TelemetryMonitor:

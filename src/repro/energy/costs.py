@@ -14,6 +14,8 @@ from __future__ import annotations
 
 from functools import lru_cache
 
+import numpy as np
+
 from repro.models.common import ModelConfig
 
 
@@ -157,6 +159,30 @@ class CostModel:
         mem += prefill_tokens * kv * 0.1        # prefill reread (flash)
         if self._state_bytes_per_seq:           # ssm/recurrent state traffic
             mem += decode_seqs * self._state_bytes_per_seq
+        return flops, mem
+
+    def iteration_cost_vec(self, *, prefill_tokens: "np.ndarray",
+                           decode_seqs: "np.ndarray",
+                           avg_context: "np.ndarray"):
+        """Vectorized :meth:`iteration_cost` over per-node arrays.
+
+        Elementwise it is the identical expression sequence (same
+        association order) as the scalar path, so the batched fleet backend
+        gets bit-for-bit the scalar flops/bytes for every node at once."""
+        tokens = prefill_tokens + decode_seqs
+        if self.window:
+            eff_ctx = np.minimum(avg_context, self.window)
+        else:
+            eff_ctx = avg_context
+        ctx = np.maximum(eff_ctx, 1.0)
+        flops = self._flops_per_token * tokens + self._attn_coeff * (
+            prefill_tokens * ctx * 0.5 + decode_seqs * ctx)
+        kv = self.kv_bytes_per_token
+        mem = self.weight_bytes + tokens * kv
+        mem = mem + decode_seqs * kv * ctx
+        mem = mem + prefill_tokens * kv * 0.1
+        if self._state_bytes_per_seq:
+            mem = mem + decode_seqs * self._state_bytes_per_seq
         return flops, mem
 
 

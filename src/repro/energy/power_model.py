@@ -22,6 +22,8 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Tuple
 
+import numpy as np
+
 
 @dataclasses.dataclass(frozen=True)
 class HardwareSpec:
@@ -180,6 +182,43 @@ class DVFSModel:
         p = (sp.p_idle + sp.p_static_active * u_busy
              + sp.p_dyn_compute * u_busy * fr_alpha
              + sp.p_dyn_memory * u_mem)
+        return t, p
+
+    # -- vectorized fleet path ------------------------------------------
+    def freq_terms_array(self, f_mhz: "np.ndarray") -> "np.ndarray":
+        """Per-node frequency terms as an ``(n, 3)`` array with columns
+        ``(comp_denominator, mem_denominator, fr**alpha)``.
+
+        Rows are drawn from the same memoised scalar ``_freq_terms`` table
+        the per-event path uses, so batched physics stays bit-identical."""
+        f = np.asarray(f_mhz, dtype=np.float64)
+        out = np.empty((f.shape[0], 3), dtype=np.float64)
+        for i in range(f.shape[0]):
+            out[i] = self._freq_terms(float(f[i]))
+        return out
+
+    def iteration_time_power_vec(self, flops: "np.ndarray",
+                                 mem_bytes: "np.ndarray",
+                                 terms: "np.ndarray"):
+        """Vectorized :meth:`iteration_time_power` over per-node work arrays.
+
+        ``terms`` is the ``(n, 3)`` array from :meth:`freq_terms_array`.
+        The arithmetic is the identical IEEE expression sequence applied
+        elementwise, so (seconds, watts) match the scalar path bit-for-bit.
+        Both denominators are strictly positive (``fr`` is clamped at 1e-3),
+        so zero work divides to exactly 0.0 — same value the scalar guard
+        produces."""
+        sp = self.spec
+        t_comp = flops / terms[..., 0]
+        t_mem = mem_bytes / terms[..., 1]
+        t_busy = np.maximum(t_comp, t_mem)
+        t = t_busy + sp.iteration_overhead_s
+        u_busy = t_busy / t
+        u_mem = t_mem / t
+        p = (sp.p_idle + sp.p_static_active * u_busy
+             + sp.p_dyn_compute * u_busy * terms[..., 2]
+             + sp.p_dyn_memory * u_mem)
+        p = np.where(t_busy <= 0.0, sp.p_idle, p)
         return t, p
 
     def iteration_time_energy(self, flops: float, mem_bytes: float,

@@ -114,7 +114,9 @@ class ServingCluster:
                  router: Callable = route_least_loaded,
                  fleet_policy: PolicySpec = None,
                  network: Union[NetworkModel, str, None] = None,
-                 policy_tick_mode: str = "iteration"):
+                 policy_tick_mode: str = "iteration",
+                 step_mode: str = "event",
+                 batched_record_history: bool = True):
         """``policies`` takes one entry per node — a registry name, a
         ready policy instance, or None (fixed clocks). When omitted,
         ``with_tuners`` keeps the legacy behaviour: an AGFT tuner per node
@@ -126,7 +128,17 @@ class ServingCluster:
         routing path (NetworkModel instance, preset name, or
         ``fixed:<ms>`` spec) and turns placement into delayed delivery;
         ``policy_tick_mode`` picks iteration-gated (default) or pure
-        wall-clock POLICY_TICK policy scheduling."""
+        wall-clock POLICY_TICK policy scheduling.
+
+        ``step_mode`` selects the drain backend: ``"event"`` (default)
+        is the per-event heap loop; ``"batched"`` steps the fleet
+        through :class:`repro.serving.fleet_step.BatchedFleetLoop` —
+        structure-of-arrays state, vectorized decode physics, batched
+        LinUCB decisions — with bit-identical per-node trajectories
+        (see that module for the exact contract and the unsupported
+        shapes, e.g. network models). ``batched_record_history`` can
+        drop per-decision tuner history on the batched path, the main
+        residual per-node Python cost at mega-fleet scale."""
         engines = [InferenceEngine(model_cfg,
                                    engine_cfg or EngineConfig(),
                                    hardware=hardware,
@@ -169,6 +181,15 @@ class ServingCluster:
                 f"policy_tick_mode must be one of {POLICY_TICK_MODES}, "
                 f"got {policy_tick_mode!r}")
         self.policy_tick_mode = policy_tick_mode
+        if step_mode not in ("event", "batched"):
+            raise ValueError(f"step_mode must be 'event' or 'batched', "
+                             f"got {step_mode!r}")
+        if step_mode == "batched" and network is not None:
+            raise NotImplementedError(
+                "step_mode='batched' does not support a network model "
+                "(in-flight routed deliveries need the event heap)")
+        self.step_mode = step_mode
+        self.batched_record_history = batched_record_history
         # priced deliveries awaiting their ROUTE event; persists across
         # drains so run_until-style repeated draining keeps consuming it
         self._deliveries = (DeliverySchedule() if network is not None
@@ -218,11 +239,25 @@ class ServingCluster:
         attached, ticks on its own cadence against the loop's global
         timeline; the loop is kept so ``summary()`` can surface its
         power-budget accounting. In-flight routed requests ride along as
-        ROUTE events."""
-        self._loop = EventLoop(self.nodes, fleet_policy=self.fleet_policy,
-                               max_iters=max_iters,
-                               router=self._deliveries,
-                               policy_tick_mode=self.policy_tick_mode)
+        ROUTE events.
+
+        With ``step_mode="batched"`` the fleet advances through the
+        structure-of-arrays :class:`repro.serving.fleet_step.
+        BatchedFleetLoop` instead — same trajectories, same ``summary()``
+        accounting, minutes instead of hours at mega-fleet scale."""
+        if self.step_mode == "batched":
+            from repro.serving.fleet_step import BatchedFleetLoop
+            self._loop = BatchedFleetLoop(
+                self.nodes, fleet_policy=self.fleet_policy,
+                max_iters=max_iters,
+                policy_tick_mode=self.policy_tick_mode,
+                record_history=self.batched_record_history)
+        else:
+            self._loop = EventLoop(self.nodes,
+                                   fleet_policy=self.fleet_policy,
+                                   max_iters=max_iters,
+                                   router=self._deliveries,
+                                   policy_tick_mode=self.policy_tick_mode)
         return self._loop.run()
 
     # ------------------------------------------------------------------

@@ -49,6 +49,10 @@ class PagedKVCache:
         # short-circuit when the whole cache is borrowed (the steady state
         # of a saturated long run, where scanning would find nothing)
         self._evictable = 0
+        # per-template prefix-key chains, memoised: key i of a template's
+        # chain is always (template_id, i), so a shorter request's chain
+        # is a prefix slice of the longest one built so far
+        self._keys_memo: Dict[int, List[Tuple[int, int]]] = {}
         self.stats = CacheStats()
 
     # ------------------------------------------------------------------
@@ -70,7 +74,15 @@ class PagedKVCache:
     # ------------------------------------------------------------------
     def _prefix_keys(self, req: Request) -> List[Tuple[int, int]]:
         shared = int(req.prompt_len * req.template_frac)
-        return [(req.template_id, i) for i in range(shared // self.block_size)]
+        n = shared // self.block_size
+        if n <= 0:
+            return []
+        memo = self._keys_memo.get(req.template_id)
+        if memo is None or len(memo) < n:
+            memo = [(req.template_id, i) for i in range(n)]
+            self._keys_memo[req.template_id] = memo
+            return memo
+        return memo[:n]
 
     def lookup_prefix(self, req: Request) -> int:
         """Longest cached prefix (tokens); records hit/miss stats."""

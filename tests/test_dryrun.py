@@ -39,8 +39,8 @@ def test_debug_mesh_lowers(arch, shape):
     assert "2 ok, 0 failed" in r.stdout
 
 
-def test_cost_extrapolation_exceeds_scan_counted():
-    out = os.path.join(REPO, "results", "_test_extrap.json")
+def test_cost_extrapolation_exceeds_scan_counted(tmp_path):
+    out = str(tmp_path / "extrap.json")
     r = run_dryrun("--arch", "tinyllama-1.1b", "--shape", "train_4k",
                    "--debug-mesh", "--cost-extrapolate", "--out", out)
     assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
