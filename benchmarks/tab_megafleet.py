@@ -23,10 +23,14 @@ router cost does not pollute either backend's drain timing.
   PYTHONPATH=src python -m benchmarks.tab_megafleet            # day replay
   PYTHONPATH=src python -m benchmarks.tab_megafleet --quick    # CI smoke
   PYTHONPATH=src python -m benchmarks.tab_megafleet --quick --check
+  PYTHONPATH=src python -m benchmarks.tab_megafleet --train-cap sweep
 
 ``--check`` compares the run's node-iterations/sec against the committed
 ``results/tab_megafleet.json`` for the same mode and fails on a >2x
-regression (the CI perf-smoke gate).
+regression (the CI perf-smoke gate). ``--train-cap`` overrides the
+batched backend's decode-train cap, or sweeps 8/16/64/256 — the sweep on
+a 1h day slice measured 64 (the committed default) fastest, ~20% over
+cap 8 and ~16% over cap 256.
 """
 from __future__ import annotations
 
@@ -55,12 +59,14 @@ ENGINE_CFG = EngineConfig(num_kv_blocks=512, kv_block_size=128,
 
 # ---------------------------------------------------------------------------
 def build_fleet(n_nodes: int, duration_s: float, rate_per_node: float,
-                seed: int, step_mode: str = "batched") -> ServingCluster:
+                seed: int, step_mode: str = "batched",
+                train_cap: int = None) -> ServingCluster:
     """Fleet + submitted trace. Round-robin placement over arrival order:
     O(1) per request, identical assignment for both backends."""
     cl = ServingCluster(get_config(PAPER_MODEL), n_nodes=n_nodes,
                         engine_cfg=ENGINE_CFG, step_mode=step_mode,
-                        batched_record_history=False)
+                        batched_record_history=False,
+                        batched_train_cap=train_cap)
     reqs = generate_azure_trace(duration_s,
                                 base_rate=rate_per_node * n_nodes,
                                 seed=seed)
@@ -95,10 +101,19 @@ def _drain_timed(cl: ServingCluster) -> Dict:
 
 
 def measure_batched(n_nodes: int, duration_s: float, rate_per_node: float,
-                    seed: int) -> Dict:
-    cl = build_fleet(n_nodes, duration_s, rate_per_node, seed, "batched")
+                    seed: int, train_cap: int = None) -> Dict:
+    cl = build_fleet(n_nodes, duration_s, rate_per_node, seed, "batched",
+                     train_cap=train_cap)
     out = _drain_timed(cl)
     out["requests"] = cl._n_submitted
+    loop = cl._loop
+    out["train_cap"] = loop.train_cap
+    out["classb_fast_steps"] = int(loop.classb_fast_steps)
+    out["classb_engine_steps"] = int(loop.classb_engine_steps)
+    out["admitted_requests"] = int(loop.admitted_requests)
+    out["engine_steps_per_admitted"] = (
+        loop.classb_engine_steps / loop.admitted_requests
+        if loop.admitted_requests else 0.0)
     return out
 
 
@@ -116,7 +131,8 @@ def measure_event_slice(n_nodes: int, slice_s: float, rate_per_node: float,
 # ---------------------------------------------------------------------------
 def run(n_nodes: int = 1000, duration_s: float = DAY_S,
         rate_per_node: float = 0.05, event_slice_s: float = 600.0,
-        seed: int = 0, quiet: bool = False) -> Dict:
+        seed: int = 0, quiet: bool = False,
+        train_cap: int = None) -> Dict:
     log = (lambda *a: None) if quiet else print
     log(f"[megafleet] event-loop slice: {n_nodes} nodes x "
         f"{event_slice_s:.0f}s @ {rate_per_node}/node/s")
@@ -124,7 +140,8 @@ def run(n_nodes: int = 1000, duration_s: float = DAY_S,
     log(f"[megafleet]   {ev['steps']} iterations in {ev['wall_s']:.1f}s "
         f"({ev['us_per_step']:.2f} us/iter)")
     log(f"[megafleet] batched replay: {n_nodes} nodes x {duration_s:.0f}s")
-    bt = measure_batched(n_nodes, duration_s, rate_per_node, seed)
+    bt = measure_batched(n_nodes, duration_s, rate_per_node, seed,
+                         train_cap=train_cap)
     log(f"[megafleet]   {bt['steps']} iterations in {bt['wall_s']:.1f}s "
         f"({bt['us_per_step']:.2f} us/iter, "
         f"{bt['node_iterations_per_sec']:.0f} node-iters/s)")
@@ -148,6 +165,27 @@ def run(n_nodes: int = 1000, duration_s: float = DAY_S,
 
 
 # ---------------------------------------------------------------------------
+SWEEP_CAPS = (8, 16, 64, 256)
+
+
+def sweep(n_nodes: int, duration_s: float, rate_per_node: float,
+          seed: int = 0) -> List[Dict]:
+    """Time the batched replay at each train cap in ``SWEEP_CAPS`` —
+    the measurement behind the committed ``TRAIN_CAP`` default (the
+    trajectories are cap-invariant, so this is a pure wall-clock
+    comparison)."""
+    out = []
+    print(f"[megafleet] train-cap sweep: {n_nodes} nodes x "
+          f"{duration_s:.0f}s @ {rate_per_node}/node/s")
+    for cap in SWEEP_CAPS:
+        bt = measure_batched(n_nodes, duration_s, rate_per_node, seed,
+                             train_cap=cap)
+        print(f"[megafleet]   cap={cap:>4}: {bt['wall_s']:6.1f}s  "
+              f"{bt['node_iterations_per_sec']:>10,.0f} node-iters/s")
+        out.append(bt)
+    return out
+
+
 def _check(payload: Dict, mode: str) -> List[str]:
     """>2x node-iterations/sec regression vs the committed artifact."""
     try:
@@ -178,6 +216,11 @@ def main() -> None:
     ap.add_argument("--check", action="store_true",
                     help="fail on >2x node-iterations/sec regression vs "
                          "committed results/tab_megafleet.json")
+    ap.add_argument("--train-cap", default=None,
+                    help="decode-train length cap for the batched backend "
+                         "(int), or 'sweep' to time caps "
+                         f"{'/'.join(str(c) for c in SWEEP_CAPS)} on the "
+                         "batched replay and exit (no artifact write)")
     args = ap.parse_args()
 
     if args.quick:
@@ -194,6 +237,13 @@ def main() -> None:
         defaults["rate_per_node"] = args.rate
     if args.event_slice is not None:
         defaults["event_slice_s"] = args.event_slice
+
+    if args.train_cap == "sweep":
+        defaults.pop("event_slice_s")
+        sweep(**defaults)
+        return
+    if args.train_cap is not None:
+        defaults["train_cap"] = int(args.train_cap)
 
     payload = run(**defaults)
     mode = "quick" if args.quick else "day"

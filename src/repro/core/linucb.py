@@ -291,6 +291,18 @@ class LinUCBBank:
     def frequencies(self) -> List[float]:
         return list(self._f)
 
+    def arm_stats(self) -> List[Tuple[float, int, float, float]]:
+        """``(f, n, mean_reward, mean_edp)`` per arm in ascending-frequency
+        order, computed in one vectorized pass — the bulk-read interface
+        the pruning framework walks (identical values to reading each
+        ``arms[f]`` view: same elementwise divisions, same zero/inf
+        conventions for unsampled arms)."""
+        n = self._n
+        safe = np.where(n > 0, n, 1)
+        mr = np.where(n > 0, self._reward_sum / safe, 0.0)
+        me = np.where(n > 0, self._edp_sum / safe, np.inf)
+        return list(zip(self._f, n.tolist(), mr.tolist(), me.tolist()))
+
     def remove(self, f: float) -> None:
         i = self._index.get(float(f))
         if i is None:
@@ -539,6 +551,18 @@ class StackedBankView:
     def argmax_ucb(self, x: np.ndarray, alpha: float) -> float:
         return self._banks.argmax_ucb(self._node, x, alpha)
 
+    def arm_stats(self) -> List[Tuple[float, int, float, float]]:
+        """Bulk ``(f, n, mean_reward, mean_edp)`` read — see
+        ``LinUCBBank.arm_stats``; row slices of this node's stack."""
+        b, i = self._banks, self._node
+        m = int(b.m[i])
+        n = b.n_[i, :m]
+        safe = np.where(n > 0, n, 1)
+        mr = np.where(n > 0, b.reward_sum[i, :m] / safe, 0.0)
+        me = np.where(n > 0, b.edp_sum[i, :m] / safe, np.inf)
+        return list(zip(b._freq_list(i), n.tolist(), mr.tolist(),
+                        me.tolist()))
+
 
 class StackedBanks:
     """A fleet of per-node LinUCB banks stored as one more SoA level:
@@ -651,19 +675,31 @@ class StackedBanks:
         ``select_ucb`` (untried-first, then UCB argmax) elsewhere. Returns
         ``(slots, freqs)``. First-max argmax over ascending active slots
         reproduces the scalar banks' lowest-frequency tie-break."""
-        k = len(idx)
         K = self.capacity
         valid = np.arange(K)[None, :] < self.m[idx][:, None]
         theta = self.theta[idx]
         tx = np.matmul(theta, X[:, :, None])[:, :, 0]
-        quad = np.einsum("ki,kaij,kj->ka", X, self.A_inv[idx], X)
-        ucb = tx + alpha * np.sqrt(np.maximum(quad, 0.0))
-        scores = np.where(greedy[:, None], tx, ucb)
+        ng = ~greedy
+        if ng.any():
+            # the exploration bonus (the quad form — the dominant cost)
+            # is only consulted on non-greedy rows; each row's einsum
+            # contraction is independent of its batch neighbours, so the
+            # subset dispatch is bit-identical to the full one
+            sub = idx[ng]
+            Xs = X[ng]
+            quad = np.einsum("ki,kaij,kj->ka", Xs, self.A_inv[sub], Xs)
+            scores = tx.copy()
+            scores[ng] = tx[ng] + alpha * np.sqrt(np.maximum(quad, 0.0))
+        else:
+            scores = tx
         scores = np.where(valid, scores, -np.inf)
         slot = np.argmax(scores, axis=1)
-        untried = valid & (self.n_[idx] == 0)
-        has_u = untried.any(axis=1) & ~greedy
-        slot = np.where(has_u, np.argmax(untried, axis=1), slot)
+        if ng.any():
+            untried = valid[ng] & (self.n_[idx[ng]] == 0)
+            has_u = untried.any(axis=1)
+            if has_u.any():
+                sl = slot[ng]
+                slot[ng] = np.where(has_u, np.argmax(untried, axis=1), sl)
         return slot, self.freqs[idx, slot]
 
     # -- per-node mutation (pruning / refinement path) -----------------
@@ -677,6 +713,19 @@ class StackedBanks:
         self.n_[i, s] = 0
         self.reward_sum[i, s] = 0.0
         self.edp_sum[i, s] = 0.0
+
+    def _reset_node(self, i: int) -> None:
+        """Broadcast reset of every slot of node ``i`` — one array write
+        per stack instead of ``capacity`` scalar ``_reset_slot`` calls."""
+        self._flist.pop(i, None)
+        self.freqs[i] = np.inf
+        self.A[i] = self._eye_A
+        self.A_inv[i] = self._eye_Ainv
+        self.b[i] = 0.0
+        self.theta[i] = 0.0
+        self.n_[i] = 0
+        self.reward_sum[i] = 0.0
+        self.edp_sum[i] = 0.0
 
     def remove(self, i: int, f: float) -> None:
         s = self.slot_of(i, float(f))
@@ -700,6 +749,14 @@ class StackedBanks:
                              f"capacity {self.capacity}")
         m = int(self.m[i])
         old_f = [float(f) for f in self.freqs[i, :m]]
+        if new == old_f:
+            # identity rebuild: every arm survives with its own row and
+            # dead slots are already pristine (class invariant) — the
+            # state after the full copy-out/reset/copy-back dance equals
+            # the state before it, so skip the dance. A converged fleet
+            # re-anchors on the same grid most refinement rounds, making
+            # this the common case at day scale.
+            return
         old_index = {f: s for s, f in enumerate(old_f)}
         old = (self.A[i, :m].copy(), self.A_inv[i, :m].copy(),
                self.b[i, :m].copy(), self.theta[i, :m].copy(),
@@ -709,8 +766,7 @@ class StackedBanks:
             else None
         if proto is not None and old[4][proto] == 0:
             proto = None                      # untouched anchor: no prior
-        for s in range(self.capacity):
-            self._reset_slot(i, s)
+        self._reset_node(i)
         self.freqs[i, :len(new)] = new
         self.m[i] = len(new)
         for s, f in enumerate(new):
@@ -743,3 +799,19 @@ class StackedBanks:
         scores = self.theta[i, :m] @ x \
             + alpha * np.sqrt(np.maximum(quad, 0.0))
         return float(self.freqs[i, int(np.argmax(scores))])
+
+    def argmax_ucb_batch(self, idx: np.ndarray, X: np.ndarray,
+                         alpha: float) -> np.ndarray:
+        """One UCB-argmax anchor per node in ``idx`` — the batched form of
+        :meth:`argmax_ucb`, using the same verified-identical batched gemv
+        and quad-form dispatches as :meth:`select_batch` (dead slots carry
+        pristine finite statistics and are masked to -inf, and first-max
+        argmax over ascending slots keeps the lowest-frequency
+        tie-break)."""
+        K = self.capacity
+        valid = np.arange(K)[None, :] < self.m[idx][:, None]
+        tx = np.matmul(self.theta[idx], X[:, :, None])[:, :, 0]
+        quad = np.einsum("ki,kaij,kj->ka", X, self.A_inv[idx], X)
+        scores = tx + alpha * np.sqrt(np.maximum(quad, 0.0))
+        scores = np.where(valid, scores, -np.inf)
+        return self.freqs[idx, np.argmax(scores, axis=1)]

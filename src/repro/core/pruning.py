@@ -71,31 +71,36 @@ class PruningFramework:
 
     # ------------------------------------------------------------------
     def apply(self, bank: LinUCBBank, round_idx: int) -> None:
+        """Arm statistics are read through ``bank.arm_stats()`` — one
+        vectorized snapshot per phase instead of thousands of per-arm view
+        resolutions. The snapshot is exact: removals never change the
+        surviving arms' sufficient statistics, so values read up front
+        equal the per-iteration live reads of the original walk."""
         if not self.cfg.enabled:
             return
         cfg = self.cfg
+        arms = bank.arms
         # 1. extreme instant pruning (early phase only)
         if round_idx <= cfg.early_rounds:
-            for f in list(bank.frequencies):
-                if len(bank.arms) <= cfg.min_arms:
+            for f, n, mr, _ in bank.arm_stats():
+                if len(arms) <= cfg.min_arms:
                     break
-                arm = bank.arms[f]
-                if (arm.n >= cfg.extreme_min_samples
-                        and arm.mean_reward < cfg.extreme_reward_threshold):
+                if (n >= cfg.extreme_min_samples
+                        and mr < cfg.extreme_reward_threshold):
                     self._prune(bank, f, "extreme", round_idx)
                     self._cascade(bank, f, round_idx)
         # 2. historical performance pruning (mature phase)
         if round_idx >= cfg.mature_rounds:
-            sampled = {f: a for f, a in bank.arms.items()
-                       if a.n >= cfg.historical_min_samples}
+            sampled = [(f, me) for f, n, _, me in bank.arm_stats()
+                       if n >= cfg.historical_min_samples]
             if len(sampled) >= 2:
-                means = np.array([a.mean_edp for a in sampled.values()])
+                means = np.array([me for _, me in sampled])
                 best = float(means.min())
                 tol = cfg.historical_tolerance_k * float(means.std())
-                for f, a in list(sampled.items()):
-                    if len(bank.arms) <= cfg.min_arms:
+                for f, me in sampled:
+                    if len(arms) <= cfg.min_arms:
                         break
-                    if a.mean_edp > best + tol and a.mean_edp > best * 1.05:
+                    if me > best + tol and me > best * 1.05:
                         self._prune(bank, f, "historical", round_idx)
                         self._cascade(bank, f, round_idx)
 

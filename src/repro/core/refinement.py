@@ -47,18 +47,34 @@ class MixedMaturityRefinement:
         self.f_max = f_max
         self.ucb_alpha = ucb_alpha
         self.log: List[dict] = []
+        # anchor -> grid memo: refinement re-anchors on the same few
+        # frequencies for most of a long run, and the grid is a pure
+        # function of the anchor (callers never mutate the list)
+        self._grid_cache: dict = {}
 
     # ------------------------------------------------------------------
     def _candidate_grid(self, anchor: float) -> List[float]:
+        cached = self._grid_cache.get(anchor)
+        if cached is not None:
+            return cached
         cfg = self.cfg
         lo = max(self.f_min, anchor - cfg.half_range_mhz)
         hi = min(self.f_max, anchor + cfg.half_range_mhz)
+        # np.float64 subclasses float, so round() on the tolist() floats
+        # is the same float.__round__ the array elements would use
         grid = np.arange(lo, hi + 1e-9, cfg.step_mhz)
-        return [float(round(f, 3)) for f in grid]
+        out = [round(f, 3) for f in grid.tolist()]
+        self._grid_cache[anchor] = out
+        return out
 
     def maybe_refine(self, bank: LinUCBBank, pruner: PruningFramework,
-                     x_t: np.ndarray, round_idx: int) -> Optional[float]:
-        """Returns the anchor if a refinement happened."""
+                     x_t: np.ndarray, round_idx: int,
+                     anchor: Optional[float] = None) -> Optional[float]:
+        """Returns the anchor if a refinement happened. ``anchor`` may carry
+        a precomputed predictive anchor (the stacked fleet path batches the
+        UCB argmax across due nodes); it must equal what
+        ``bank.argmax_ucb(x_t, self.ucb_alpha)`` would return and is only
+        consulted in the mature phase."""
         cfg = self.cfg
         if not cfg.enabled or round_idx == 0 or round_idx % cfg.interval:
             return None
@@ -68,7 +84,8 @@ class MixedMaturityRefinement:
             if anchor is None:
                 return None
         else:
-            anchor = bank.argmax_ucb(x_t, self.ucb_alpha)
+            if anchor is None:
+                anchor = bank.argmax_ucb(x_t, self.ucb_alpha)
             mode = "predictive"
         grid = pruner.filter_candidates(self._candidate_grid(anchor))
         band = getattr(bank, "band", None)

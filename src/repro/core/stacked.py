@@ -316,17 +316,29 @@ class StackedAGFT:
             node = int(reg[i])
             self.pruners[node].apply(self.banks.view(node),
                                      int(self.round[node]))
-        # refinement (only while learning)
+        # refinement (only while learning) — predictive anchors (the UCB
+        # argmax, the dominant per-node cost once the fleet is mature) are
+        # batched into one stacked dispatch; the per-node framework call
+        # then reuses the precomputed anchor
         rfcfg = self.cfg.refinement
         if rfcfg.enabled:
             rnd = self.round[reg]
             due = (~self.converged[reg]) & (rnd > 0) \
                 & (rnd % rfcfg.interval == 0)
-            for i in np.flatnonzero(due):
-                node = int(reg[i])
-                self.refiners[node].maybe_refine(
-                    self.banks.view(node), self.pruners[node],
-                    x_t[i], int(self.round[node]))
+            if due.any():
+                anchors = {}
+                pred = due & (rnd >= rfcfg.maturity_threshold)
+                if pred.any():
+                    pi = np.flatnonzero(pred)
+                    af = self.banks.argmax_ucb_batch(reg[pi], x_t[pi],
+                                                     self.alpha)
+                    anchors = dict(zip(pi.tolist(), af.tolist()))
+                for i in np.flatnonzero(due):
+                    node = int(reg[i])
+                    self.refiners[node].maybe_refine(
+                        self.banks.view(node), self.pruners[node],
+                        x_t[i], int(self.round[node]),
+                        anchor=anchors.get(i))
 
         # select: greedy exploitation once converged, UCB otherwise
         greedy = self.converged[reg]
@@ -379,9 +391,13 @@ class StackedAGFT:
     def _pruning_precheck(self, reg: np.ndarray) -> np.ndarray:
         """True per node iff ``PruningFramework.apply`` COULD mutate the
         bank this round. The early-phase check is exact (same candidate
-        predicate); the mature-phase check is a necessary condition (the
-        dynamic std tolerance is dropped) — a framework call gated in is
-        a no-op whenever the full predicate fails, so gating is lossless."""
+        predicate); the mature-phase check evaluates the full predicate —
+        worst sampled mean EDP beyond BOTH the dynamic std tolerance and
+        the 5% relative floor — with the tolerance shrunk by a 1e-9
+        relative margin to absorb summation-order drift vs the scalar
+        ``np.std`` (a framework call gated in is a no-op whenever the
+        exact predicate fails, so erring toward calling is lossless;
+        erring away would silently skip a prune and is forbidden)."""
         cfg = self.cfg.pruning
         k = len(reg)
         if not cfg.enabled:
@@ -406,10 +422,20 @@ class StackedAGFT:
             sampled = active & (nn >= cfg.historical_min_samples)
             with np.errstate(divide="ignore", invalid="ignore"):
                 me = banks.edp_sum[reg] / nn
+            mes = np.where(sampled, me, 0.0)
+            cnt = sampled.sum(axis=1)
             best = np.min(np.where(sampled, me, np.inf), axis=1)
             worst = np.max(np.where(sampled, me, -np.inf), axis=1)
-            need |= mature & room & (sampled.sum(axis=1) >= 2) \
-                & (worst > best * 1.05)
+            # masked two-pass variance of the sampled means — the same
+            # arithmetic as the scalar np.std, modulo summation order
+            denom = np.maximum(cnt, 1)
+            mean = mes.sum(axis=1) / denom
+            var = np.where(sampled, (mes - mean[:, None]) ** 2,
+                           0.0).sum(axis=1) / denom
+            tol = cfg.historical_tolerance_k * np.sqrt(var)
+            need |= mature & room & (cnt >= 2) \
+                & (worst > best * 1.05) \
+                & (worst > best + tol * (1.0 - 1e-9))
         return need
 
     # ------------------------------------------------------------------

@@ -116,7 +116,9 @@ class ServingCluster:
                  network: Union[NetworkModel, str, None] = None,
                  policy_tick_mode: str = "iteration",
                  step_mode: str = "event",
-                 batched_record_history: bool = True):
+                 batched_record_history: bool = True,
+                 batched_train_cap: Optional[int] = None,
+                 batched_classb_path: str = "vector"):
         """``policies`` takes one entry per node — a registry name, a
         ready policy instance, or None (fixed clocks). When omitted,
         ``with_tuners`` keeps the legacy behaviour: an AGFT tuner per node
@@ -138,7 +140,11 @@ class ServingCluster:
         (see that module for the exact contract and the unsupported
         shapes, e.g. network models). ``batched_record_history`` can
         drop per-decision tuner history on the batched path, the main
-        residual per-node Python cost at mega-fleet scale."""
+        residual per-node Python cost at mega-fleet scale;
+        ``batched_train_cap`` overrides the decode-train length cap
+        (``BatchedFleetLoop.TRAIN_CAP``), and ``batched_classb_path``
+        selects the admission path (``"vector"`` default, ``"engine"``
+        for the real-step fallback)."""
         engines = [InferenceEngine(model_cfg,
                                    engine_cfg or EngineConfig(),
                                    hardware=hardware,
@@ -190,6 +196,8 @@ class ServingCluster:
                 "(in-flight routed deliveries need the event heap)")
         self.step_mode = step_mode
         self.batched_record_history = batched_record_history
+        self.batched_train_cap = batched_train_cap
+        self.batched_classb_path = batched_classb_path
         # priced deliveries awaiting their ROUTE event; persists across
         # drains so run_until-style repeated draining keeps consuming it
         self._deliveries = (DeliverySchedule() if network is not None
@@ -251,7 +259,9 @@ class ServingCluster:
                 self.nodes, fleet_policy=self.fleet_policy,
                 max_iters=max_iters,
                 policy_tick_mode=self.policy_tick_mode,
-                record_history=self.batched_record_history)
+                record_history=self.batched_record_history,
+                train_cap=self.batched_train_cap,
+                classb_path=self.batched_classb_path)
         else:
             self._loop = EventLoop(self.nodes,
                                    fleet_policy=self.fleet_policy,

@@ -32,6 +32,8 @@ import heapq
 import itertools
 from typing import List, Optional, Tuple
 
+import numpy as np
+
 from repro.energy import A6000, CostModel, DVFSModel, HardwareSpec
 from repro.models.common import ModelConfig
 from repro.serving.driver import EngineNode, drive
@@ -90,6 +92,42 @@ class SimBackend:
                 m2 -= self._shared_weight_bytes
             mem += max(m2, 0.0)
         t, p = self.dvfs.iteration_time_power(flops, mem, f_mhz)
+        return t, p * t, p
+
+    def execute_mixed_vec(self, prefill_tokens, prefill_count,
+                          prefill_ctx_sum, decode_seqs, decode_ctx_sum,
+                          terms):
+        """Batched :meth:`execute` over per-node plan aggregates — the
+        mixed prefill+decode pricing of the batched fleet backend's
+        admission fast path.
+
+        Each row is one node's iteration: new prompt tokens and the
+        context sum over its prefill half (``sum(r.prefilled + n/2)``),
+        decode sequence count and context sum, and the node's tabulated
+        frequency terms. Elementwise this is the identical float-op
+        sequence as the scalar ``execute`` — the two ``iteration_cost``
+        calls, the shared-weight-read subtraction on mixed iterations,
+        and the same masking as the scalar branches — so per-node
+        (dt, energy, power) is bit-for-bit the scalar result.
+        """
+        cost = self.cost
+        has_pf = prefill_tokens > 0
+        has_de = decode_seqs > 0
+        zeros = np.zeros_like(prefill_tokens)
+        f1, m1 = cost.iteration_cost_vec(
+            prefill_tokens=prefill_tokens, decode_seqs=zeros,
+            avg_context=prefill_ctx_sum / np.maximum(prefill_count, 1))
+        f2, m2 = cost.iteration_cost_vec(
+            prefill_tokens=zeros, decode_seqs=decode_seqs,
+            avg_context=decode_ctx_sum / np.maximum(decode_seqs, 1))
+        # weight reads are shared between the prefill and decode halves
+        # of a mixed iteration — don't double count them (scalar branch:
+        # ``if plan.prefill: m2 -= shared``, then ``mem += max(m2, 0)``)
+        m2 = np.where(has_pf, m2 - self._shared_weight_bytes, m2)
+        m2 = np.maximum(m2, 0.0)
+        flops = np.where(has_pf, f1, 0.0) + np.where(has_de, f2, 0.0)
+        mem = np.where(has_pf, m1, 0.0) + np.where(has_de, m2, 0.0)
+        t, p = self.dvfs.iteration_time_power_vec(flops, mem, terms)
         return t, p * t, p
 
 

@@ -21,11 +21,22 @@ the whole fleet in rounds:
   order)`` heaps so per-request Python runs only on the iterations where
   a request actually completes.
 * **classB** (everything else — arrivals, admission, chunked prefill,
-  KV-pressure blocked ticks): the node's array row is flushed back into
-  its engine, the engine runs one REAL ``engine.step()``, and the row is
-  refreshed. Admission order, prefix-cache LRU/stats mutations (including
-  failed ``try_allocate`` side effects), TTFT events and preemption
-  semantics are therefore exactly the per-event loop's, by construction.
+  KV-pressure blocked ticks): a three-phase vectorized admission path
+  (``_step_classb``). Discrete pre-work runs against the real engine
+  objects — arrival ingest, the scheduler's own ``_admit`` (so admission
+  order and prefix-cache LRU/stats mutations, failed ``try_allocate``
+  side effects included, are exactly the per-event loop's), plan
+  selection over mirrored running-order prefill lists — then all nodes'
+  mixed prefill+decode iterations are priced in one batched
+  ``SimBackend.execute_mixed_vec`` dispatch, and completion (TTFT
+  assignment, ``register_prefix``, finish-heap joins, blocked ticks) is
+  replayed per node in the scalar engine's exact order. No real
+  ``engine.step()`` runs on this path (the ``classb_engine_steps``
+  counter stays 0; ``classb_path="engine"`` retains the old
+  flush/step/refresh fallback for bisection). Preemption is provably
+  unreachable under the ``max_num_seqs <= max_batched_tokens`` guard:
+  every running request contributes to the plan, so an empty plan means
+  an empty running set and only blocked idle-ticks remain structural.
 
 Decisions run through :class:`repro.core.stacked.StackedAGFT` (one numpy
 dispatch per stage for every node due this round) when the fleet is
@@ -46,9 +57,14 @@ generated workloads do not produce:
   order differently (the loop steps nodes strictly before the horizon);
 * a POLICY_TICK coinciding exactly with a node's event time fires after
   that step in both backends, but an arrival landing exactly on a tick
-  boundary of an idle node may order differently;
-* ``max_iters`` is honored at round granularity (a round may overshoot
-  by up to ``n_nodes - 1`` steps); draining runs are unaffected.
+  boundary of an idle node may order differently.
+
+``max_iters`` is honored exactly: when the remaining budget no longer
+covers one step per eligible node, the loop falls back to strict
+event-time single-stepping and stops on the exact step count, like
+``EventLoop.run`` (under truncation the *allocation* of the final steps
+across nodes follows event order, which for multi-node fleets matches
+the event loop's heap order up to same-instant ties).
 
 Unsupported shapes raise ``NotImplementedError`` at construction: network
 routing (in-flight deliveries), fleet policy + tick mode, non-Sim
@@ -120,7 +136,9 @@ class BatchedFleetLoop:
                  max_iters: int = 10_000_000,
                  policy_tick_mode: str = "iteration",
                  decisions: str = "auto",
-                 record_history: bool = True):
+                 record_history: bool = True,
+                 train_cap: Optional[int] = None,
+                 classb_path: str = "vector"):
         if policy_tick_mode not in POLICY_TICK_MODES:
             raise ValueError(
                 f"policy_tick_mode must be one of {POLICY_TICK_MODES}, "
@@ -128,6 +146,14 @@ class BatchedFleetLoop:
         if decisions not in ("auto", "stacked", "facade"):
             raise ValueError("decisions must be 'auto', 'stacked' or "
                              f"'facade', got {decisions!r}")
+        if classb_path not in ("vector", "engine"):
+            raise ValueError("classb_path must be 'vector' or 'engine', "
+                             f"got {classb_path!r}")
+        self.train_cap = int(train_cap) if train_cap is not None \
+            else self.TRAIN_CAP
+        if self.train_cap < 1:
+            raise ValueError(f"train_cap must be >= 1, got {train_cap}")
+        self.classb_path = classb_path
         self.nodes = list(nodes)
         self.engines = [nd.engine for nd in self.nodes]
         self.policies = [nd.policy for nd in self.nodes]
@@ -176,6 +202,13 @@ class BatchedFleetLoop:
         self.steps = 0
         self.now = 0.0
         self._round_hook = None          # test instrumentation: f(loop)
+        self.backend = e0.backend        # homogeneity-checked above
+        #: real ``engine.step()`` calls (the retired classB fallback —
+        #: stays 0 on the default vectorized path) and total admissions,
+        #: so benchmarks can report real-steps-per-admitted-request
+        self.classb_engine_steps = 0
+        self.classb_fast_steps = 0
+        self.admitted_requests = 0
 
         # --- stacked numeric state (mirrors of engine scalars) --------
         f8, i8 = np.float64, np.int64
@@ -214,6 +247,10 @@ class BatchedFleetLoop:
         self._fin_map: List[dict] = [{} for _ in range(n)]
         self._adm_seq: List[dict] = [{} for _ in range(n)]
         self._adm_ctr = [0] * n
+        # running-order prefilling requests per node — the scheduler's
+        # chunk-pass order, maintained so admission plans never rescan
+        # the running dict
+        self._prefilling: List[list] = [[] for _ in range(n)]
         # engine-side staleness: dirty => arrays lead the engine object
         self.dirty = np.zeros(n, bool)
         self.gen_dirty = np.zeros(n, bool)
@@ -315,7 +352,7 @@ class BatchedFleetLoop:
         aseq = self._adm_seq[i]
         ctr = self._adm_ctr[i]
         it = c.iterations_total
-        P = 0
+        pl = []
         S = 0
         for req in sched.running.values():
             rid = req.request_id
@@ -326,8 +363,9 @@ class BatchedFleetLoop:
                 # order, so same-iteration finishers pop in plan order
                 aseq[rid] = sq = ctr
                 ctr += 1
+                self.admitted_requests += 1
             if req.prefilled < req.prompt_len:
-                P += 1
+                pl.append(req)
             else:
                 S += req.prefilled + req.generated
                 if rid not in fmap:
@@ -338,9 +376,10 @@ class BatchedFleetLoop:
                     fmap[rid] = fin
                     heapq.heappush(heap, (fin, sq, req))
         self._adm_ctr[i] = ctr
+        self._prefilling[i] = pl
         self.R[i] = len(sched.running)
-        self.P[i] = P
-        self.D[i] = self.R[i] - P
+        self.P[i] = len(pl)
+        self.D[i] = self.R[i] - len(pl)
         self.S_ctx[i] = S
         # lazily drop entries whose request finished through a real step
         while heap and heap[0][2].state is RequestState.FINISHED:
@@ -498,7 +537,12 @@ class BatchedFleetLoop:
     # ------------------------------------------------------------------
     #: max decode iterations advanced per node per round. Horizon cuts
     #: (arrival / policy due / finish / fleet tick) bound trains anyway;
-    #: the cap bounds wasted speculative physics past a cut.
+    #: the cap bounds wasted speculative physics past a cut. Measured on
+    #: the 1000-node Azure day replay (``benchmarks/tab_megafleet.py
+    #: --train-cap sweep``, 1h slice): 64 beats 8 by ~20% and 256 by
+    #: ~16% node-iterations/sec — small caps pay per-round dispatch
+    #: overhead more often, large caps price physics past the typical
+    #: ~2s policy horizon that then gets thrown away.
     TRAIN_CAP = 64
 
     def _policy_horizon(self, idx: np.ndarray) -> np.ndarray:
@@ -518,22 +562,19 @@ class BatchedFleetLoop:
                                 "next_sample", -np.inf)
         return ns
 
-    def _step_trains(self, idx: np.ndarray) -> int:
-        """Advance every pure-decode node in ``idx`` by a *train* of
-        consecutive iterations, cut at its next event horizon: request
-        finish, pending arrival, policy decision (sample due / tick), or
-        fleet tick. Within a train nothing discrete happens, so the
-        whole trajectory is computable up front — the vectorized mirror
-        of repeated ``run_iteration`` + ``SimBackend.execute`` all-decode
-        steps. Clock/energy/busy accumulate through a leading-element
-        ``cumsum`` (numpy's axis-1 cumsum is the sequential left fold),
-        so every intermediate value is bit-identical to the scalar
-        ``+=`` chain. Returns the number of engine steps taken."""
+    def _step_trains(self, idx: np.ndarray, cap: int) -> int:
+        """Advance every pure-decode node in ``idx`` by a *train* of up
+        to ``cap`` consecutive iterations, cut at its next event horizon:
+        request finish, pending arrival, policy decision (sample due /
+        tick), or fleet tick. Within a train nothing discrete happens, so
+        the whole trajectory is computable up front — the vectorized
+        mirror of repeated ``run_iteration`` + ``SimBackend.execute``
+        all-decode steps. Clock/energy/busy accumulate through a
+        leading-element ``cumsum`` (numpy's axis-1 cumsum is the
+        sequential left fold), so every intermediate value is
+        bit-identical to the scalar ``+=`` chain. Returns the number of
+        engine steps taken."""
         k_n = len(idx)
-        cap = self.TRAIN_CAP
-        remaining = self.max_iters - self.steps
-        if remaining < k_n * cap:
-            cap = max(1, remaining // k_n)
         m = np.minimum(self.next_fin[idx] - self.iters[idx], cap)
         Mm = int(m.max())
         D = self.D[idx]
@@ -639,11 +680,304 @@ class BatchedFleetLoop:
         self.next_fin[i] = heap[0][0] if heap else _BIG
 
     def _step_py(self, i: int) -> None:
-        """One real engine step for node ``i`` (arrival ingest, admission,
-        prefill, blocked tick — anything with discrete side effects)."""
+        """One real engine step for node ``i`` — the retired classB
+        fallback, kept behind ``classb_path='engine'`` for bisection and
+        the equivalence suite's cross-check of the vectorized path."""
+        self.classb_engine_steps += 1
         self._flush(i)
         self.engines[i].step()
         self._refresh(i)
+
+    def _step_classb(self, b_idx: np.ndarray) -> int:
+        """One engine iteration for every structural node in ``b_idx`` —
+        arrivals, admission, chunked prefill, blocked ticks — with **no**
+        real ``engine.step()`` calls. Three phases:
+
+        1. per-node discrete pre-work against the real engine objects:
+           arrival ingest, idle-advance billing, the scheduler's own
+           ``_admit`` (so prefix-cache ``try_allocate`` side effects —
+           stats and LRU motion on failure included — are the event
+           loop's by construction), and plan selection over the mirrored
+           running-order prefill lists;
+        2. one batched ``SimBackend.execute_mixed_vec`` dispatch pricing
+           every node's mixed prefill+decode iteration;
+        3. per-node completion replay in the scalar engine's exact order:
+           chunk advancement, first-token assignment + TTFT accounting,
+           ``register_prefix``, instant finishers, then decode-finish
+           heap joins and ``_process_finishers``.
+
+        Preemption is unreachable here: with ``max_num_seqs <=
+        max_batched_tokens`` every running request contributes to the
+        plan, so an empty plan means an empty running set and the scalar
+        engine's preemption scan is a guaranteed no-op before its blocked
+        tick. Returns the number of engine steps taken (== len(b_idx);
+        blocked ticks are steps too)."""
+        dvfs = self.dvfs
+        r_node: List[int] = []
+        r_clk: List[float] = []
+        r_pf: List[list] = []
+        r_pf_tok: List[int] = []
+        r_pf_cnt: List[int] = []
+        r_pf_ctx: List[float] = []
+        r_ctok: List[int] = []
+        r_dec: List[int] = []
+        r_dctx: List[int] = []
+        r_newdec: List[list] = []
+        inf = np.inf
+        clk_a = self.clock[b_idx].tolist()
+        D_a = self.D[b_idx].tolist()
+        S_a = self.S_ctx[b_idx].tolist()
+        for k, i in enumerate(b_idx.tolist()):
+            eng = self.engines[i]
+            sched = eng.sched
+            pend = eng._pending
+            add = sched.add_request
+            clk = clk_a[k]
+            while pend and pend[0][0] <= clk:
+                add(heapq.heappop(pend)[2])
+            if not (sched.running or sched.waiting):
+                # idle engine: ``step`` advances to the next arrival,
+                # billing idle energy for the gap (advance_to semantics)
+                t_arr = pend[0][0]
+                dt = t_arr - clk
+                if dt < 0.0:
+                    dt = 0.0
+                self.energy[i] += dvfs.idle_energy(dt)
+                if t_arr > clk:
+                    clk = t_arr
+                while pend and pend[0][0] <= clk:
+                    add(heapq.heappop(pend)[2])
+            # _admit's own first move is this same emptiness check; doing
+            # it here skips the call entirely on no-queue steps
+            admitted = sched._admit(clk) if sched.waiting else ()
+            newdec: list = ()
+            if admitted:
+                aseq = self._adm_seq[i]
+                ctr = self._adm_ctr[i]
+                pl = self._prefilling[i]
+                newdec = []
+                for req in admitted:
+                    aseq[req.request_id] = ctr
+                    ctr += 1
+                    if req.prefilled < req.prompt_len:
+                        pl.append(req)
+                    else:
+                        newdec.append(req)     # fully prefix-cached
+                self._adm_ctr[i] = ctr
+                self.admitted_requests += len(admitted)
+            # the scheduler's batch pass: every running decode fits (the
+            # max_num_seqs <= max_batched_tokens guard), then chunked
+            # prefill over the running-order prefilling mirror
+            dec_n = D_a[k] + len(newdec)
+            dctx = S_a[k]
+            for req in newdec:
+                dctx += req.prefilled          # generated == 0 here
+            budget = sched.max_batched_tokens - dec_n
+            chunk_cap = sched.prefill_chunk
+            pf: list = []
+            pf_tok = 0
+            pf_ctx = 0.0
+            ctok = 0
+            for req in self._prefilling[i]:
+                if budget <= 0:
+                    break
+                chunk = req.prompt_len - req.prefilled
+                if chunk > chunk_cap:
+                    chunk = chunk_cap
+                if chunk > budget:
+                    chunk = budget
+                pf.append((req, chunk))
+                pf_tok += chunk
+                # prefix-cache credit is read while the request sits on
+                # its first chunk, exactly as run_iteration's pre-execute
+                # pass does
+                if req.cached_tokens and req.prefilled == req.cached_tokens:
+                    ctok += req.cached_tokens
+                pf_ctx += req.prefilled + chunk / 2
+                budget -= chunk
+            if not pf and not dec_n:
+                # empty plan <=> empty running set (see docstring): the
+                # engine burns a blocked millisecond at idle power — no
+                # metric writes, only the classification mirrors move
+                self.energy[i] += dvfs.idle_energy(1e-3)
+                self.clock[i] = clk + 1e-3
+                self.W[i] = len(sched.waiting)
+                self.pend[i] = len(pend)
+                self.next_arrival[i] = pend[0][0] if pend else inf
+                self.dirty[i] = True
+                continue
+            r_node.append(i)
+            r_clk.append(clk)
+            r_pf.append(pf)
+            r_pf_tok.append(pf_tok)
+            r_pf_cnt.append(len(pf))
+            r_pf_ctx.append(pf_ctx)
+            r_ctok.append(ctok)
+            r_dec.append(dec_n)
+            r_dctx.append(dctx)
+            r_newdec.append(newdec)
+
+        steps = len(b_idx)
+        self.classb_fast_steps += steps
+        if not r_node:
+            return steps
+        rows = np.asarray(r_node, np.int64)
+        pf_tok_v = np.asarray(r_pf_tok, np.int64)
+        dec_v = np.asarray(r_dec, np.int64)
+        t_v, e_v, p_v = self.backend.execute_mixed_vec(
+            pf_tok_v, np.asarray(r_pf_cnt, np.int64),
+            np.asarray(r_pf_ctx), dec_v,
+            np.asarray(r_dctx, np.int64), self.terms[rows])
+
+        # completion replay accumulates its per-row counter outcomes in
+        # plain lists and commits them as one scatter per array below —
+        # the per-row loop touches only real objects (requests, heaps,
+        # the scheduler) plus the rare TTFT accumulators. The elementwise
+        # arithmetic (int sums, one f8 add per element on unique rows)
+        # is the scalar writes' exactly.
+        finished_state = RequestState.FINISHED
+        clk_v = np.asarray(r_clk) + t_v
+        clk_l = clk_v.tolist()
+        it_v = self.iters[rows] + 1
+        it_l = it_v.tolist()
+        gen_pf_l: List[int] = []
+        n_fin_l: List[int] = []
+        n_join_l: List[int] = []
+        join_ctx_l: List[int] = []
+        nf_l: List[int] = []
+        R_l: List[int] = []
+        P_l: List[int] = []
+        W_l: List[int] = []
+        npend_l: List[int] = []
+        narr_l: List[float] = []
+        hits_l: List[int] = []
+        q_l: List[int] = []
+        usage_l: List[float] = []
+        for j, i in enumerate(r_node):
+            eng = self.engines[i]
+            sched = eng.sched
+            kv = eng.kv
+            pend = eng._pending
+            clk = clk_l[j]
+            it = it_l[j]
+            heap = self._heaps[i]
+            fmap = self._fin_map[i]
+            aseq = self._adm_seq[i]
+            gen_pf = 0
+            n_join = 0
+            join_ctx = 0
+            fin_pf: list = ()
+            pf = r_pf[j]
+            if pf:
+                completed = False
+                for req, chunk in pf:
+                    req.prefilled += chunk
+                    if req.prefilled >= req.prompt_len:
+                        # prompt done -> first output token this iter
+                        completed = True
+                        gen_pf += 1
+                        req.generated += 1
+                        if req.first_token_time is None:
+                            req.first_token_time = clk
+                            self.ttft_sum[i] += clk - req.arrival_time
+                            self.ttft_cnt[i] += 1
+                        kv.register_prefix(req)
+                        if req.generated >= req.output_len:
+                            if fin_pf == ():
+                                fin_pf = []
+                            fin_pf.append(req)
+                        else:
+                            rid = req.request_id
+                            fin = it + req.output_len - req.generated
+                            fmap[rid] = fin
+                            heapq.heappush(heap, (fin, aseq[rid], req))
+                            n_join += 1
+                            join_ctx += req.prefilled + req.generated
+                if completed:
+                    self._prefilling[i] = [
+                        r for r in self._prefilling[i]
+                        if r.prefilled < r.prompt_len]
+                if fin_pf:
+                    # the scalar finished loop runs after both plan
+                    # halves; prefill finishers free their KV before the
+                    # decode finishers (matched by _process_finishers
+                    # running below)
+                    run_d = sched.running
+                    done = eng.finished
+                    for req in fin_pf:
+                        rid = req.request_id
+                        req.state = finished_state
+                        req.finish_time = clk
+                        del run_d[rid]
+                        aseq.pop(rid, None)
+                        kv.free(req)
+                        done.append(req)
+            for req in r_newdec[j]:
+                # admitted fully-cached: decodes from this very
+                # iteration, so the finish iteration is fixed now;
+                # ``generated`` stays implicit (reconstructed by _flush
+                # from the finish map, like train decodes)
+                rid = req.request_id
+                fin = it + req.output_len - 1
+                fmap[rid] = fin
+                heapq.heappush(heap, (fin, aseq[rid], req))
+            gen_pf_l.append(gen_pf)
+            n_fin_l.append(len(fin_pf))
+            n_join_l.append(n_join)
+            join_ctx_l.append(join_ctx)
+            nf_l.append(heap[0][0] if heap else _BIG)
+            R_l.append(len(sched.running))
+            P_l.append(len(self._prefilling[i]))
+            W_l.append(len(sched.waiting))
+            n_p = len(pend)
+            npend_l.append(n_p)
+            narr_l.append(pend[0][0] if n_p else inf)
+            st = kv.stats
+            hits_l.append(st.hits)
+            q_l.append(st.queries)
+            usage_l.append(kv.usage)
+        nf_v = np.asarray(nf_l, np.int64)
+        n_fin_v = np.asarray(n_fin_l, np.int64)
+        w_v = np.asarray(W_l, np.int64)
+        npend_v = np.asarray(npend_l, np.int64)
+        self.clock[rows] = clk_v
+        self.energy[rows] += e_v
+        self.busy[rows] += t_v
+        self.prompt_tok[rows] += pf_tok_v
+        self.cached_tok[rows] += np.asarray(r_ctok, np.int64)
+        self.gen_tok[rows] += dec_v + np.asarray(gen_pf_l, np.int64)
+        self.iters[rows] = it_v
+        self.fin_cnt[rows] += n_fin_v
+        self.hits[rows] = hits_l
+        self.queries[rows] = q_l
+        # decode contexts grew by one token each; prefill completers
+        # join the decode pool at their post-iteration context
+        self.S_ctx[rows] = np.asarray(r_dctx, np.int64) + dec_v \
+            + np.asarray(join_ctx_l, np.int64)
+        self.D[rows] = dec_v + np.asarray(n_join_l, np.int64)
+        self.R[rows] = R_l
+        self.P[rows] = P_l
+        self.W[rows] = w_v
+        self.pend[rows] = npend_v
+        self.next_arrival[rows] = narr_l
+        self.g_wait[rows] = w_v + npend_v
+        self.next_fin[rows] = nf_v
+        self.usage[rows] = usage_l
+        self.gen_dirty[rows[dec_v > 0]] = True
+        self.dirty[rows] = True
+        self.g_freq[rows] = self.freq[rows]
+        self.g_pow[rows] = p_v
+        due = nf_v <= it_v
+        if due.any():
+            # decode finishers whose precomputed iteration just came due;
+            # runs after the scatters (it reads iters/clock and rewrites
+            # S_ctx/R/D/fin_cnt/usage/next_fin for the nodes it touches)
+            for i in rows[due].tolist():
+                self._process_finishers(i)
+        # gauge tail of run_iteration's metric block (post-finisher state)
+        self.g_run[rows] = self.R[rows]
+        self.g_usage[rows] = self.usage[rows]
+        return steps
 
     # ------------------------------------------------------------------
     # policies
@@ -780,11 +1114,45 @@ class BatchedFleetLoop:
                                  | (self.next_arrival <= self.clock))
             a_idx = np.flatnonzero(eligible & ~classB)
             b_idx = np.flatnonzero(classB)
+            fast = self.classb_path == "vector"
+            remaining = self.max_iters - self.steps
+            if remaining < len(a_idx) + len(b_idx):
+                # the budget can't cover one step per eligible node this
+                # round: finish in strict event-time order, one step at
+                # a time, so the loop lands exactly on max_iters like
+                # EventLoop.run
+                elig = np.flatnonzero(eligible)
+                j = int(elig[int(np.argmin(nev[elig]))])
+                jj = np.asarray([j])
+                if classB[j]:
+                    if fast:
+                        self.steps += self._step_classb(jj)
+                    else:
+                        self._step_py(j)
+                        self.steps += 1
+                else:
+                    self.steps += self._step_trains(jj, 1)
+                t_j = float(nev[j])
+                if t_j > self.now:
+                    self.now = t_j
+                if not self._tick_mode:
+                    self._policy_phase(jj)
+                if self._round_hook is not None:
+                    self._round_hook(self)
+                continue
             if len(a_idx):
-                self.steps += self._step_trains(a_idx)
-            for i in b_idx.tolist():
-                self._step_py(i)
-            self.steps += len(b_idx)
+                cap = self.train_cap
+                budget_a = remaining - len(b_idx)
+                if budget_a < len(a_idx) * cap:
+                    cap = budget_a // len(a_idx)   # >= 1 by the branch above
+                self.steps += self._step_trains(a_idx, cap)
+            if len(b_idx):
+                if fast:
+                    self.steps += self._step_classb(b_idx)
+                else:
+                    for i in b_idx.tolist():
+                        self._step_py(i)
+                    self.steps += len(b_idx)
             t_max = float(np.max(nev[eligible]))
             if t_max > self.now:
                 self.now = t_max

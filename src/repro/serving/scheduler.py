@@ -81,15 +81,18 @@ class ContinuousBatchingScheduler:
         return len(self.running)
 
     # ------------------------------------------------------------------
-    def _admit(self, now: float) -> None:
-        """FCFS admission while seq and KV budgets allow.
+    def _admit(self, now: float) -> List[Request]:
+        """FCFS admission while seq and KV budgets allow; returns the
+        requests admitted this call, in admission order (the batched
+        fleet backend drives admission directly off this list).
 
         A request that does not fit the KV budget is skipped (not
         head-of-line blocking) and keeps its queue position relative to the
         other non-admitted requests.
         """
+        admitted: List[Request] = []
         if not self.waiting or len(self.running) >= self.max_num_seqs:
-            return
+            return admitted
         skipped: List[Request] = []
         for _ in range(len(self.waiting)):
             if len(self.running) >= self.max_num_seqs:
@@ -103,9 +106,11 @@ class ContinuousBatchingScheduler:
                 # prefix-cache hits skip that prefill work
                 req.prefilled = req.cached_tokens
                 self.running[req.request_id] = req
+                admitted.append(req)
             else:
                 skipped.append(req)
         self.waiting.extendleft(reversed(skipped))
+        return admitted
 
     def _preempt_lowest_priority(self) -> bool:
         """Free blocks by kicking the most recent running request back to

@@ -157,6 +157,82 @@ def test_throughput_engine_config():
 
 
 # ---------------------------------------------------------------------------
+# vectorized classB path: counters + the retained engine fallback
+# ---------------------------------------------------------------------------
+
+def test_classb_vectorized_no_engine_steps():
+    """The admission fast path runs zero real engine.step() calls, even
+    under KV pressure (waiting queues, failed admissions, blocked ticks)."""
+    _, b = drain_both(2, 15, rate=4.0)
+    loop = b._loop
+    assert loop.classb_engine_steps == 0
+    assert loop.admitted_requests > 0
+    assert loop.classb_fast_steps > 0
+
+
+def test_classb_engine_fallback_path():
+    """classb_path='engine' retains the flush/step/refresh fallback and
+    stays bit-identical too (bisection escape hatch)."""
+    _, b = drain_both(2, 16, rate=4.0, batched_classb_path="engine")
+    loop = b._loop
+    assert loop.classb_engine_steps > 0
+    assert loop.classb_fast_steps == 0
+
+
+def test_train_cap_parameter():
+    """Any train cap produces the same trajectories (caps only bound
+    speculative physics past a horizon cut)."""
+    for cap in (1, 8, 256):
+        drain_both(3, 17, batched_train_cap=cap)
+    with pytest.raises(ValueError, match="train_cap"):
+        ServingCluster(CFG, n_nodes=1, step_mode="batched",
+                       batched_train_cap=0).drain()
+
+
+# ---------------------------------------------------------------------------
+# max_iters is honored exactly (EventLoop.run parity)
+# ---------------------------------------------------------------------------
+
+def test_max_iters_exact_single_node():
+    """Truncated single-node runs are bit-identical at every cut — the
+    batched loop lands on the exact step count instead of overshooting by
+    a round."""
+    for cut in (1, 7, 50, 413):
+        a = make(1, 20, step_mode="event")
+        b = make(1, 20, step_mode="batched")
+        sa = a.drain(max_iters=cut)
+        sb = b.drain(max_iters=cut)
+        assert sa == sb == cut
+        assert_fleets_identical(a, b, sa, sb)
+
+
+def test_max_iters_exact_multi_node():
+    """Multi-node: both backends consume exactly min(max_iters, drain)
+    steps; a budget covering the drain reproduces the full trajectory."""
+    full = make(3, 21, step_mode="batched").drain()
+    assert full > 100
+    for cut in (1, 5, full // 3, full - 1):
+        a = make(3, 21, step_mode="event")
+        b = make(3, 21, step_mode="batched")
+        sa = a.drain(max_iters=cut)
+        sb = b.drain(max_iters=cut)
+        assert sa == sb == min(cut, full), cut
+    a = make(3, 21, step_mode="event")
+    b = make(3, 21, step_mode="batched")
+    sa = a.drain(max_iters=full)
+    sb = b.drain(max_iters=full)
+    assert sa == sb == full
+    assert_fleets_identical(a, b, sa, sb)
+
+
+def test_max_iters_exact_tick_mode():
+    for cut in (3, 29):
+        a = make(2, 22, step_mode="event", policy_tick_mode="tick")
+        b = make(2, 22, step_mode="batched", policy_tick_mode="tick")
+        assert a.drain(max_iters=cut) == b.drain(max_iters=cut) == cut
+
+
+# ---------------------------------------------------------------------------
 # unsupported shapes fail loudly, never silently diverge
 # ---------------------------------------------------------------------------
 
@@ -224,6 +300,32 @@ def _run_monotone_check(n, seed, tick):
     assert np.all(loop.clock >= state["prev"] - 0.0)
 
 
+def _run_classa_soundness(n, seed, tick, cap):
+    """classA dispatch is only sound for nodes with NO admission-side
+    work: an empty waiting queue, no chunked prefill in progress, and no
+    arrival due at or before the node's current clock (every train
+    iteration starts strictly before the next arrival horizon)."""
+    cl = make(n, seed, dur=20.0, rate=0.8, policy_tick_mode=tick,
+              step_mode="batched")
+    loop = BatchedFleetLoop(cl.nodes, fleet_policy=None,
+                            policy_tick_mode=tick, train_cap=cap)
+    orig = loop._step_trains
+    seen = {"nodes": 0}
+
+    def checked(idx, cap_):
+        assert np.all(loop.W[idx] == 0), "classA node with waiting work"
+        assert np.all(loop.P[idx] == 0), "classA node mid-prefill"
+        assert np.all(loop.D[idx] > 0), "classA node with no decodes"
+        assert np.all(loop.next_arrival[idx] > loop.clock[idx]), \
+            "classA node with an arrival already due"
+        seen["nodes"] += len(idx)
+        return orig(idx, cap_)
+
+    loop._step_trains = checked
+    loop.run()
+    assert seen["nodes"] > 0
+
+
 if _HAVE_HYPOTHESIS:
     @settings(max_examples=10, deadline=None)
     @given(n=st.integers(min_value=1, max_value=5),
@@ -231,7 +333,24 @@ if _HAVE_HYPOTHESIS:
            tick=st.sampled_from(["iteration", "tick"]))
     def test_clocks_monotone_across_horizons(n, seed, tick):
         _run_monotone_check(n, seed, tick)
+
+    @settings(max_examples=10, deadline=None)
+    @given(n=st.integers(min_value=1, max_value=5),
+           seed=st.integers(min_value=0, max_value=2 ** 20),
+           tick=st.sampled_from(["iteration", "tick"]),
+           cap=st.sampled_from([1, 8, 64]))
+    def test_classa_nodes_have_no_admission_work(n, seed, tick, cap):
+        _run_classa_soundness(n, seed, tick, cap)
 else:                                                 # pragma: no cover
     @pytest.mark.skip(reason="hypothesis not installed")
     def test_clocks_monotone_across_horizons():
         pass
+
+    def test_classa_nodes_have_no_admission_work():
+        """Deterministic fallback when hypothesis is unavailable: run the
+        same invariant check over a fixed sample grid."""
+        for n, seed, tick, cap in [(1, 3, "iteration", 64),
+                                   (3, 5, "iteration", 8),
+                                   (4, 7, "tick", 1),
+                                   (5, 11, "tick", 64)]:
+            _run_classa_soundness(n, seed, tick, cap)
