@@ -204,6 +204,24 @@ def _network_reduce(results, quick):
                  f"maxdelay_edp{worst.get('edp', 0):+.1f}%"), out
 
 
+def _faults_units(quick, deps):
+    from benchmarks import tab_faults
+    return [(tab_faults._cell, (a,))
+            for a in tab_faults.unit_args(
+                120 if quick else 300,
+                tab_faults.QUICK_PRESETS if quick else None)]
+
+
+def _faults_reduce(results, quick):
+    from benchmarks import tab_faults
+    out = tab_faults._assemble(results, quiet=True)
+    churn = out["summary"].get("churn", {})
+    return 0.0, (f"churn_resilient_compl"
+                 f"{churn.get('resilient_completion_rate', 0):.3f};"
+                 f"churn_naive_lost"
+                 f"{churn.get('naive_lost_requests', 0)}"), out
+
+
 def _powercap_units(quick, deps):
     from benchmarks import tab_powercap
     return [(tab_powercap._cell, (a,))
@@ -241,6 +259,8 @@ GRID = [
                                 "reduce": _powercap_reduce}),
     ("tab_network_delay_grid", {"units": _network_units,
                                 "reduce": _network_reduce}),
+    ("tab_faults_robustness", {"units": _faults_units,
+                               "reduce": _faults_reduce}),
     ("tab_megafleet_batched", _mono(_megafleet)),
     ("roofline_terms", _mono(_roofline)),
 ]

@@ -1,0 +1,168 @@
+"""Fault-preset x policy-resilience grid (robustness; ROADMAP fault
+items): what seeded fault injection costs each controller, and what the
+graceful-degradation paths buy back.
+
+The same fixed-seed trace is served by a 3-node cluster under every
+combination of
+
+  fault preset   ``none`` (healthy anchor), ``flaky-dvfs`` (stuck
+                 actuations), ``node-churn`` (crash/repair with retry
+                 re-routing), ``thermal`` (throttle windows),
+                 ``lossy-telemetry`` (blank monitor windows)
+  configuration  ``resilient``  per-node AGFT with fault-aware freezes
+                               + the preset's full retry budget
+                 ``naive``      agft-naive (learns from corrupted
+                               windows, never re-issues stuck
+                               actuations) + a zero retry budget
+                 ``static``     fixed f_max, no tuner, full retry
+                               budget — isolates the serving-path
+                               resilience from the learning story
+
+Per cell we report completion rate (finished / non-dropped submitted),
+drop counts, SLO attainment (fraction of finished requests with TTFT
+under the threshold), energy/EDP, and the fault counters. The summary
+pulls the acceptance comparisons: resilient completes 100% of
+non-dropped requests under churn while the naive no-retry baseline
+provably loses requests, and the resilient tuner's EDP under corrupted
+telemetry vs the naive learner's.
+"""
+from __future__ import annotations
+
+import argparse
+from typing import Dict, List, Optional
+
+from benchmarks.common import PAPER_MODEL, save_json
+from repro.configs import get_config
+from repro.serving.cluster import ServingCluster
+from repro.workloads import PROTOTYPES, generate_requests
+
+PRESETS = ["none", "flaky-dvfs", "node-churn", "thermal",
+           "lossy-telemetry"]
+QUICK_PRESETS = ["none", "node-churn", "lossy-telemetry"]
+CONFIGS = ("resilient", "naive", "static")
+N_NODES = 3
+FAULT_SEED = 0
+#: TTFT SLO threshold (seconds) for the attainment column
+SLO_TTFT_S = 1.0
+
+
+def _spec_and_policies(preset: str, config: str):
+    """The (fault spec, per-node policies) a grid cell runs."""
+    if config == "resilient":
+        return preset, ["agft"] * N_NODES
+    if config == "naive":
+        spec = preset if preset == "none" else f"{preset};crash:retries=0"
+        return spec, ["agft-naive"] * N_NODES
+    return preset, [None] * N_NODES          # static f_max
+
+
+def _trace(n: int, seed: int):
+    return generate_requests(PROTOTYPES["normal"], n, base_rate=4.0,
+                             seed=seed)
+
+
+def _serve(preset: str, config: str, n_requests: int, seed: int) -> Dict:
+    spec, policies = _spec_and_policies(preset, config)
+    cl = ServingCluster(get_config(PAPER_MODEL), n_nodes=N_NODES,
+                        with_tuners=False, policies=policies,
+                        faults=spec, fault_seed=FAULT_SEED)
+    cl.submit(_trace(n_requests, seed))
+    steps = cl.drain()
+    s = cl.summary()
+    fin = [r for e in cl.engines for r in e.finished]
+    slo = (sum(1 for r in fin if r.ttft is not None
+               and r.ttft <= SLO_TTFT_S) / len(fin)) if fin else 0.0
+    return {
+        "preset": preset,
+        "config": config,
+        "submitted": s.submitted,
+        "finished": s.finished,
+        "dropped_total": s.dropped_total,
+        "completion_rate": s.completion_rate,
+        "slo_attainment": slo,
+        "energy_j": s.energy_j,
+        "ttft_s": s.mean_ttft_s,
+        "tpot_s": s.mean_tpot_s,
+        "edp": s.edp,
+        "node_frequencies": s.node_frequencies,
+        "fault_counters": s.fault_counters,
+        "engine_steps": steps,
+    }
+
+
+def unit_args(n_requests: int, presets: Optional[List[str]] = None,
+              seed: int = 23) -> List[tuple]:
+    """One unit per (preset, configuration) cell."""
+    presets = PRESETS if presets is None else presets
+    return [(p, c, n_requests, seed) for p in presets for c in CONFIGS]
+
+
+def _cell(args: tuple) -> Dict:
+    return _serve(*args)
+
+
+def _assemble(rows: List[Dict], quiet: bool = False) -> Dict:
+    grid: Dict[str, Dict] = {}
+    for r in rows:
+        grid[f"{r['preset']}|{r['config']}"] = r
+
+    summary: Dict[str, object] = {}
+    churn_res = grid.get("node-churn|resilient")
+    churn_naive = grid.get("node-churn|naive")
+    if churn_res and churn_naive:
+        summary["churn"] = {
+            "resilient_completion_rate": churn_res["completion_rate"],
+            "resilient_dropped": churn_res["dropped_total"],
+            "naive_dropped": churn_naive["dropped_total"],
+            "naive_lost_requests": (churn_naive["submitted"]
+                                    - churn_naive["finished"]),
+        }
+    lossy_res = grid.get("lossy-telemetry|resilient")
+    lossy_naive = grid.get("lossy-telemetry|naive")
+    if lossy_res and lossy_naive and lossy_naive["edp"]:
+        summary["lossy_telemetry_resilient_vs_naive_edp_pct"] = (
+            100.0 * (lossy_res["edp"] / lossy_naive["edp"] - 1.0))
+    anchor = grid.get("none|resilient")
+    if anchor:
+        summary["fault_cost_vs_healthy_pct"] = {
+            p: {k: 100.0 * (grid[f"{p}|resilient"][k] / anchor[k] - 1.0)
+                for k in ("energy_j", "edp", "ttft_s") if anchor[k]}
+            for p in sorted({r["preset"] for r in rows})
+            if p != "none" and f"{p}|resilient" in grid}
+    out = {"grid": grid, "summary": summary}
+    save_json("tab_faults.json", out)
+    if not quiet:
+        print(f"{'cell':>28s} {'compl':>6s} {'drop':>5s} {'slo':>6s} "
+              f"{'energy':>9s} {'edp':>9s} {'ttft':>8s}")
+        for key, r in grid.items():
+            print(f"{key:>28s} {r['completion_rate']:6.3f} "
+                  f"{r['dropped_total']:5d} {r['slo_attainment']:6.3f} "
+                  f"{r['energy_j'] / 1e3:8.1f}k {r['edp']:9.1f} "
+                  f"{r['ttft_s']:7.3f}s")
+        churn = summary.get("churn")
+        if churn:
+            print(f"churn: resilient completes "
+                  f"{churn['resilient_completion_rate']:.3f} of "
+                  f"non-dropped; naive no-retry loses "
+                  f"{churn['naive_lost_requests']} requests")
+    return out
+
+
+def run(n_requests: int = 300, presets: Optional[List[str]] = None,
+        seed: int = 23, quiet: bool = False) -> Dict:
+    rows = [_cell(a) for a in unit_args(n_requests, presets, seed)]
+    return _assemble(rows, quiet=quiet)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller trace + 3 presets (CI bench-smoke cell)")
+    ap.add_argument("--requests", type=int, default=0)
+    args = ap.parse_args()
+    n = args.requests or (120 if args.quick else 300)
+    run(n_requests=n, presets=QUICK_PRESETS if args.quick else None)
+
+
+if __name__ == "__main__":
+    main()

@@ -75,6 +75,16 @@ class TelemetryMonitor:
         """True once the engine clock has crossed the next sample point."""
         return engine.clock >= self.next_sample
 
+    def skip(self, engine, now: Optional[float] = None) -> None:
+        """A scrape attempt failed (telemetry dropout, ``repro.serving.
+        faults``): re-arm the sampling window WITHOUT taking a snapshot.
+        ``prev_snapshot``/``prev_time`` are untouched, so the next
+        successful ``observe`` spans the gap — one stale window covering
+        both periods, which fault-aware policies refuse to learn from."""
+        if now is None:
+            now = engine.clock
+        self.next_sample = now + self.sampling_period_s
+
     def observe(self, engine,
                 now: Optional[float] = None) -> Optional[WindowStats]:
         """Snapshot now and return the window since the previous snapshot.

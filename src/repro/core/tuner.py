@@ -41,6 +41,12 @@ class AGFTConfig:
     initial_step_mhz: float = 90.0
     # ablations
     fine_grained: bool = True              # False => "No-grain"
+    # graceful degradation under fault injection (repro.serving.faults):
+    # freeze bandit updates on faulted/stale telemetry windows, hold the
+    # previous frequency, and re-issue actuations that diverged from
+    # telemetry. False = the naive baseline that learns from corrupted
+    # windows (benchmarks/tab_faults.py quantifies the difference).
+    fault_aware: bool = True
     pruning: PruningConfig = dataclasses.field(default_factory=PruningConfig)
     refinement: RefinementConfig = dataclasses.field(
         default_factory=RefinementConfig)
@@ -136,6 +142,19 @@ class AGFTTuner:
         return self.act(engine, now=now)
 
     def act(self, engine, now: Optional[float] = None) -> float:
+        # fault surface (None on healthy engines — the zero-fault path
+        # pays one attribute read and stays decision-identical)
+        fs = (getattr(engine, "fault_state", None)
+              if self.cfg.fault_aware else None)
+        if fs is not None and fs.scrape_dropped(
+                engine.clock if now is None else now):
+            # telemetry dropout: the scrape failed, the window is blank.
+            # Re-arm the monitor without snapshotting (the next success
+            # spans the gap) and hold the last safe frequency — no
+            # context, no reward, nothing for the bandit to learn from.
+            self.monitor.skip(engine, now=now)
+            return self._fault_hold(engine, None, t=now)
+        w_start = self.monitor.prev_time
         window = self.monitor.observe(engine, now=now)
         if window is None:
             # first observation: the monitor armed the window; take the floor
@@ -143,6 +162,19 @@ class AGFTTuner:
                                       self.cfg.ucb_alpha)
             self._actuate(engine, f0, None, None, None, t=now)
             return f0
+
+        if fs is not None and (
+                fs.disrupted_since(w_start)
+                or (self.prev_action is not None
+                    and engine.frequency != self.prev_action)):
+            # faulted/stale window: a crash, recovery, throttle flip, or
+            # dropout touched it — or the actuator silently stuck and the
+            # engine diverged from the issued frequency. Its telemetry
+            # would poison the LinUCB statistics, so freeze: no credit,
+            # no convergence step, no refinement; hold the previous
+            # frequency (re-issuing it, which is the stuck-DVFS recovery)
+            # and withhold the corrupted context from the next credit.
+            return self._fault_hold(engine, window, t=now)
 
         x_t = self.features(window)
 
@@ -181,6 +213,18 @@ class AGFTTuner:
         return f
 
     # ------------------------------------------------------------------
+    def _fault_hold(self, engine, window, t: Optional[float] = None
+                    ) -> float:
+        """Graceful degradation on a faulted window: re-issue the previous
+        action (safe hold — also the stuck-actuator recovery path), record
+        a ``fault-hold`` history row, and clear ``prev_context`` so the
+        bandit credits nothing that touched corrupted telemetry."""
+        f = (self.prev_action if self.prev_action is not None
+             else float(engine.frequency))
+        self._actuate(engine, f, None, window, "fault-hold", None, t=t)
+        self.prev_context = None
+        return f
+
     def _actuate(self, engine, f: float, reward, window, phase,
                  x_t: Optional[np.ndarray] = None,
                  t: Optional[float] = None) -> None:

@@ -30,7 +30,8 @@ import numpy as np
 from repro.configs import get_config
 from repro.energy import A6000, A6000_MEASURED, TPU_V5E
 from repro.policies import available_policies, get_policy
-from repro.serving import (NETWORK_PRESETS, POLICY_TICK_MODES, EngineConfig,
+from repro.serving import (FAULT_PRESETS, NETWORK_PRESETS,
+                           POLICY_TICK_MODES, EngineConfig,
                            InferenceEngine, NetworkModel)
 from repro.serving.cluster import ServingCluster
 from repro.workloads import (PROTOTYPES, generate_azure_trace,
@@ -143,6 +144,9 @@ def _serve_cluster(args) -> dict:
     cl = ServingCluster(get_config(args.arch), n_nodes=args.nodes,
                         hardware=hw, policies=policies, fleet_policy=fleet,
                         network=network,
+                        faults=(args.faults if args.faults != "none"
+                                else None),
+                        fault_seed=args.fault_seed,
                         policy_tick_mode=args.policy_tick_mode)
     if args.policy == "none" and args.frequency:
         for e in cl.engines:
@@ -176,6 +180,13 @@ def _serve_cluster(args) -> dict:
     if s.mean_net_delay_s is not None:
         out["mean_net_delay_s"] = s.mean_net_delay_s
         out["max_net_delay_s"] = s.max_net_delay_s
+    out["submitted"] = s.submitted
+    out["dropped_total"] = s.dropped_total
+    out["completion_rate"] = s.completion_rate
+    if args.faults != "none":
+        out["faults"] = args.faults
+        out["fault_seed"] = args.fault_seed
+        out["fault_counters"] = s.fault_counters
     return out
 
 
@@ -214,6 +225,13 @@ def main():
                          "fixed:<ms> for a constant total routing delay")
     ap.add_argument("--network-seed", type=int, default=0,
                     help="seed of the network model's hop-latency stream")
+    ap.add_argument("--faults", default="none",
+                    help="fault-injection preset "
+                         f"({', '.join(sorted(FAULT_PRESETS))}) or clause "
+                         "spec like 'crash:mttf=60,mttr=5;telemetry:"
+                         "drop=0.3' (see repro.serving.faults)")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed of the per-node fault RNG streams")
     ap.add_argument("--policy-tick-mode", default="iteration",
                     choices=list(POLICY_TICK_MODES),
                     help="when per-node policies decide: 'iteration' "
@@ -226,9 +244,10 @@ def main():
 
     if args.fleet_policy != "none" and args.nodes < 2:
         ap.error("--fleet-policy needs --nodes >= 2")
-    # network routing and pure policy ticks live in the cluster/event-loop
-    # path; a single node just becomes a 1-node cluster there
+    # network routing, fault injection and pure policy ticks live in the
+    # cluster/event-loop path; a single node becomes a 1-node cluster
     if (args.nodes > 1 or args.network_model != "none"
+            or args.faults != "none"
             or args.policy_tick_mode != "iteration"):
         summary = _serve_cluster(args)
     else:

@@ -36,6 +36,23 @@ def make_agft(hardware: HardwareSpec, cfg: Optional[AGFTConfig] = None,
     return AGFTTuner(hardware, cfg or AGFTConfig(**kwargs))
 
 
+@register_policy("agft-naive")
+def make_agft_naive(hardware: HardwareSpec,
+                    cfg: Optional[AGFTConfig] = None,
+                    **kwargs) -> AGFTTuner:
+    """AGFT with graceful degradation disabled (``fault_aware=False``):
+    under fault injection (``repro.serving.faults``) it credits faulted
+    and stale telemetry windows into the LinUCB bank and never re-issues
+    stuck actuations — the poisoned-feedback baseline the resilient
+    tuner is measured against in ``benchmarks/tab_faults.py``. On a
+    healthy engine it is exactly ``agft``."""
+    if cfg is not None and kwargs:
+        raise TypeError("pass either cfg= or AGFTConfig field kwargs")
+    cfg = cfg or AGFTConfig(**kwargs)
+    return AGFTTuner(hardware,
+                     dataclasses.replace(cfg, fault_aware=False))
+
+
 @register_policy("agft-switchcost")
 def make_agft_switchcost(hardware: HardwareSpec,
                          switch_cost_j: Optional[float] = None,

@@ -103,7 +103,19 @@ class WindowedPolicy:
         once per wall-clock tick, with the telemetry window cut at the
         tick's virtual time ``now`` instead of at an iteration boundary.
         One tick = one decision — the monitor's due-gating is the event
-        loop's job in this mode (and ``maybe_act``'s in iteration mode)."""
+        loop's job in this mode (and ``maybe_act``'s in iteration mode).
+
+        Under fault injection (``repro.serving.faults``) a failed
+        telemetry scrape blanks the window: the monitor is re-armed
+        without a snapshot, no decision is taken (the engine holds its
+        frequency), and a ``blank`` history row records the dropout —
+        the rule-policy half of graceful degradation (AGFT's richer
+        freeze lives in ``repro.core.tuner``)."""
+        fs = getattr(engine, "fault_state", None)
+        if fs is not None and fs.scrape_dropped(now):
+            self.monitor.skip(engine, now=now)
+            self._record(engine, None, None, t=now)
+            return None
         window = self.monitor.observe(engine, now=now)
         f = self.decide(window, engine)
         if f is not None:

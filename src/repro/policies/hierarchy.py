@@ -181,25 +181,49 @@ class BandCoordinator:
         return self._grid[max(i, 0)]
 
     def _compute_bands(self, weights: List[float],
-                       draws: List[Optional[float]]) -> List[Band]:
+                       draws: List[Optional[float]],
+                       down: Optional[List[bool]] = None
+                       ) -> List[Optional[Band]]:
+        """``down`` (fault injection, ``repro.serving.faults``) excludes
+        dead nodes from the water-fill: their weight, demand, and idle
+        floor are zero, so the whole budget re-spreads over survivors
+        within this tick, and their band is None (nothing to govern).
+        With ``down=None`` (or no node down) the arithmetic is exactly
+        the historical healthy-fleet path."""
         n = len(weights)
         cap = float(self.power_cap_w)
+        if down is not None and not any(down):
+            down = None
         if self.uniform:
-            f = self._f_for_budget(cap / n)
-            return [(f, f)] * n
-        floor = min(self.hw.p_idle, cap / n)
+            n_up = n if down is None else n - sum(down)
+            f = self._f_for_budget(cap / max(n_up, 1))
+            if down is None:
+                return [(f, f)] * n
+            return [None if d else (f, f) for d in down]
+        n_up = n if down is None else n - sum(down)
+        floor = min(self.hw.p_idle, cap / max(n_up, 1))
         demands = []
-        for d in draws:
+        for i, d in enumerate(draws):
+            if down is not None and down[i]:
+                demands.append(0.0)
+                continue
             demand = self._p_fmax
             if d is not None:
                 demand = min(demand,
                              max(d * self.ramp_headroom, self._p_fmin))
             demands.append(max(demand - floor, 0.0))
-        if all(w <= 0 for w in weights):
+        if down is not None:
+            weights = [0.0 if dn else w for w, dn in zip(weights, down)]
+            if all(w <= 0 for w in weights):
+                weights = [0.0 if dn else 1.0 for dn in down]
+        elif all(w <= 0 for w in weights):
             weights = [1.0] * n
-        extra = waterfill(cap - n * floor, weights, demands)
-        bands = []
-        for a in extra:
+        extra = waterfill(cap - n_up * floor, weights, demands)
+        bands: List[Optional[Band]] = []
+        for i, a in enumerate(extra):
+            if down is not None and down[i]:
+                bands.append(None)
+                continue
             hi = self._f_for_budget(floor + a)
             lo = (self.hw.f_min if self.band_width_mhz is None
                   else max(self.hw.f_min, hi - self.band_width_mhz))
@@ -234,7 +258,14 @@ class BandCoordinator:
         weights = [float(s["vllm:num_requests_running"]
                          + s["vllm:num_requests_waiting"]) for s in snaps]
         self._prev_energy, self._prev_t = energy, now
-        self.bands = self._compute_bands(weights, draws)
+        # fault injection: dead nodes leave the water-fill — the power
+        # budget re-spreads over survivors within this tick (their draw
+        # history is also voided so recovery doesn't ramp off stale watts)
+        down = [getattr(e, "fault_state", None) is not None
+                and e.fault_state.down for e in engines]
+        if any(down):
+            draws = [None if dn else d for d, dn in zip(draws, down)]
+        self.bands = self._compute_bands(weights, draws, down=down)
         self.history.append({
             "t": now,
             "bands": list(self.bands),

@@ -2,6 +2,9 @@ from repro.serving.driver import (EngineNode, EventKind, EventLoop,
                                   POLICY_TICK_MODES, drive)
 from repro.serving.engine import (EngineConfig, InferenceEngine, JaxBackend,
                                   SimBackend)
+from repro.serving.faults import (FaultConfig, FaultModel,
+                                  PRESETS as FAULT_PRESETS,
+                                  parse_fault_spec)
 from repro.serving.kv_cache import PagedKVCache
 from repro.serving.metrics import MetricsExporter
 from repro.serving.network import (DeliverySchedule, NetworkConfig,
@@ -13,5 +16,6 @@ __all__ = ["EngineConfig", "EngineNode", "EventKind", "EventLoop",
            "InferenceEngine", "JaxBackend", "SimBackend", "PagedKVCache",
            "MetricsExporter", "NetworkConfig", "NetworkModel",
            "NETWORK_PRESETS", "DeliverySchedule", "POLICY_TICK_MODES",
-           "Request", "RequestState", "BatchPlan",
+           "FaultConfig", "FaultModel", "FAULT_PRESETS",
+           "parse_fault_spec", "Request", "RequestState", "BatchPlan",
            "ContinuousBatchingScheduler", "drive"]

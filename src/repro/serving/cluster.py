@@ -54,6 +54,7 @@ from repro.models.common import ModelConfig
 from repro.policies import get_policy
 from repro.serving.driver import POLICY_TICK_MODES, EngineNode, EventLoop
 from repro.serving.engine import EngineConfig, InferenceEngine
+from repro.serving.faults import FaultModel
 from repro.serving.network import DeliverySchedule, NetworkModel
 from repro.serving.request import Request
 
@@ -102,6 +103,12 @@ class ClusterSummary:
     # routing-path accounting (None unless a network model is attached)
     mean_net_delay_s: Optional[float] = None
     max_net_delay_s: Optional[float] = None
+    # robustness accounting (always present; non-trivial only under
+    # fault injection / deadlines — see repro.serving.faults)
+    submitted: int = 0
+    dropped_total: int = 0
+    completion_rate: float = 1.0
+    fault_counters: Optional[dict] = None
 
 
 class ServingCluster:
@@ -114,6 +121,8 @@ class ServingCluster:
                  router: Callable = route_least_loaded,
                  fleet_policy: PolicySpec = None,
                  network: Union[NetworkModel, str, None] = None,
+                 faults: Union[FaultModel, str, None] = None,
+                 fault_seed: int = 0,
                  policy_tick_mode: str = "iteration",
                  step_mode: str = "event",
                  batched_record_history: bool = True,
@@ -129,8 +138,11 @@ class ServingCluster:
         for hierarchical experiments). ``network`` prices each submit's
         routing path (NetworkModel instance, preset name, or
         ``fixed:<ms>`` spec) and turns placement into delayed delivery;
-        ``policy_tick_mode`` picks iteration-gated (default) or pure
-        wall-clock POLICY_TICK policy scheduling.
+        ``faults`` attaches a seeded fault-injection model
+        (:class:`repro.serving.faults.FaultModel` instance, preset name
+        like ``"node-churn"``, or the clause spec grammar — ``fault_seed``
+        seeds a string spec); ``policy_tick_mode`` picks iteration-gated
+        (default) or pure wall-clock POLICY_TICK policy scheduling.
 
         ``step_mode`` selects the drain backend: ``"event"`` (default)
         is the per-event heap loop; ``"batched"`` steps the fleet
@@ -187,6 +199,23 @@ class ServingCluster:
                 f"policy_tick_mode must be one of {POLICY_TICK_MODES}, "
                 f"got {policy_tick_mode!r}")
         self.policy_tick_mode = policy_tick_mode
+        if isinstance(faults, str):
+            faults = FaultModel.from_spec(faults, seed=fault_seed)
+        if faults is not None and not faults.active:
+            faults = None                  # the "none" preset: healthy
+        self.faults = faults
+        if faults is not None:
+            faults.bind(engines)
+            faults.network = self.network
+            # crash re-routes reuse the cluster router, restricted to the
+            # surviving subset (the loop's least-loaded fallback applies
+            # when the installed router is the default anyway)
+            cluster_router = self.router
+
+            def _route_up(engs, req, up):
+                return up[cluster_router([engs[i] for i in up], req)]
+
+            faults.route = _route_up
         if step_mode not in ("event", "batched"):
             raise ValueError(f"step_mode must be 'event' or 'batched', "
                              f"got {step_mode!r}")
@@ -194,14 +223,22 @@ class ServingCluster:
             raise NotImplementedError(
                 "step_mode='batched' does not support a network model "
                 "(in-flight routed deliveries need the event heap)")
+        if step_mode == "batched" and faults is not None:
+            raise NotImplementedError(
+                "step_mode='batched' does not support an active fault "
+                "model (crash evacuation and re-routing need the event "
+                "heap)")
         self.step_mode = step_mode
         self.batched_record_history = batched_record_history
         self.batched_train_cap = batched_train_cap
         self.batched_classb_path = batched_classb_path
         # priced deliveries awaiting their ROUTE event; persists across
         # drains so run_until-style repeated draining keeps consuming it
-        self._deliveries = (DeliverySchedule() if network is not None
+        # (crash re-routes need the pipe even without a network model)
+        self._deliveries = (DeliverySchedule()
+                            if network is not None or faults is not None
                             else None)
+        self.submitted = 0
         self._loop: Optional[EventLoop] = None   # last drain's event loop
 
     # ------------------------------------------------------------------
@@ -226,8 +263,15 @@ class ServingCluster:
         to the direct path meanwhile."""
         engines = self.engines
         net = self.network
+        fm = self.faults
+        self.submitted += len(requests)
         for req in sorted(requests, key=lambda r: r.arrival_time):
-            idx = self.router(engines, req)
+            if fm is not None:
+                # never place on a node currently known dark (mid-drain
+                # submits; before the first drain every node is up)
+                idx = fm.pick_node(engines, req)
+            else:
+                idx = self.router(engines, req)
             if net is None:
                 engines[idx].submit([req])
             else:
@@ -267,7 +311,8 @@ class ServingCluster:
                                    fleet_policy=self.fleet_policy,
                                    max_iters=max_iters,
                                    router=self._deliveries,
-                                   policy_tick_mode=self.policy_tick_mode)
+                                   policy_tick_mode=self.policy_tick_mode,
+                                   fault_model=self.faults)
         return self._loop.run()
 
     # ------------------------------------------------------------------
@@ -298,4 +343,14 @@ class ServingCluster:
             delays = [r.net_delay for r in fin if r.net_delay is not None]
             out.mean_net_delay_s = float(np.mean(delays)) if delays else 0.0
             out.max_net_delay_s = float(np.max(delays)) if delays else 0.0
+        # robustness accounting: deadline sheds always count; retry-
+        # budget drops and fault counters require an attached model
+        out.submitted = self.submitted
+        out.dropped_total = sum(len(e.sched.dropped) for e in engines)
+        if self.faults is not None:
+            out.dropped_total += self.faults.drops
+            out.fault_counters = self.faults.counters()
+        served = max(out.submitted - out.dropped_total, 1)
+        out.completion_rate = (len(fin) / served
+                               if out.submitted > 0 else 1.0)
         return out

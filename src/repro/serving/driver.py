@@ -34,6 +34,18 @@ events —
                      trajectory); pure-tick trajectories are pinned by
                      their own golden (``tests/golden_agft_decisions_
                      tick.json``)
+``NODE_FAULT`` /     a bound :class:`repro.serving.faults.FaultModel`'s
+``NODE_RECOVER``     next transition fires: node crashes (in-flight and
+                     queued work evacuated and re-routed with exponential
+                     backoff under a bounded retry budget), recoveries
+                     (the node rejoins the loop, clock advanced without
+                     billing the outage), and thermal throttle flips
+                     (the running frequency is force-clamped under the
+                     cap and the governing band becomes the intersection
+                     of the coordinator band with the thermal envelope).
+                     With no fault model — or an all-zero config — none
+                     of these paths execute and the loop is byte-
+                     identical to the healthy simulation
 
 Hierarchical power capping rides on FLEET_TICK (``repro.policies.
 hierarchy``): when the fleet policy declares ``coordinates_bands``, the
@@ -64,7 +76,9 @@ import dataclasses
 import enum
 import heapq
 import itertools
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.serving.request import RequestState
 
 #: FLEET_TICK cadence (sim-seconds) when the fleet policy doesn't declare
 #: ``sampling_period_s`` — matches the paper's sub-second telemetry window.
@@ -88,6 +102,8 @@ class EventKind(enum.IntEnum):
     FLEET_TICK = 2     # fleet-scope policy samples aggregated telemetry
     ROUTE = 3          # router delivers in-flight requests to engines
     POLICY_TICK = 4    # node policy decides on a wall-clock cadence
+    NODE_FAULT = 5     # fault model: crash / thermal-throttle onset
+    NODE_RECOVER = 6   # fault model: repair / throttle release
 
 
 @dataclasses.dataclass
@@ -132,7 +148,8 @@ class EventLoop:
                  t_end: Optional[float] = None,
                  max_iters: int = 10_000_000,
                  router: Optional[object] = None,
-                 policy_tick_mode: str = "iteration"):
+                 policy_tick_mode: str = "iteration",
+                 fault_model: Optional[object] = None):
         if policy_tick_mode not in POLICY_TICK_MODES:
             raise ValueError(
                 f"policy_tick_mode must be one of {POLICY_TICK_MODES}, "
@@ -167,10 +184,35 @@ class EventLoop:
         for i in range(len(self.nodes)):
             if self._schedule_node(i):
                 self._live += 1
-        if router is not None:
-            nxt = router.next_time()
+        # fault injection (repro.serving.faults): an ACTIVE model turns
+        # the loop into a NODE_FAULT/NODE_RECOVER consumer; an absent or
+        # all-zero model leaves every healthy path byte-identical
+        self.faults = None
+        #: the coordinator's last per-node bands, remembered so a thermal
+        #: release can restore them after the throttle intersection
+        self._coord_band: List[Optional[Tuple[float, float]]] = \
+            [None] * len(self.nodes)
+        #: observation hook called once per popped event, BEFORE it is
+        #: applied (i.e. after the previous event fully settled):
+        #: ``on_event(loop, kind, t)`` — the conservation property test
+        #: audits request accounting at every step through it
+        self.on_event = None
+        self._route_t: Optional[float] = None    # earliest armed ROUTE
+        self._route_ver = 0     # orphans superseded ROUTE events (faults)
+        if fault_model is not None and fault_model.active:
+            fault_model.bind(self.engines)
+            self.faults = fault_model
+            if self.router is None:
+                # crash evacuation re-routes through a delivery schedule
+                # even when no network model is configured
+                from repro.serving.network import DeliverySchedule
+                self.router = DeliverySchedule()
+            self._arm_fault_event()
+        if self.router is not None:
+            nxt = self.router.next_time()
             if nxt is not None and (t_end is None or nxt < t_end):
                 self._push(nxt, EventKind.ROUTE, -1)
+                self._route_t = nxt
         self._meter_t = 0.0
         self._meter_e = 0.0
         if fleet_policy is not None and self._heap:
@@ -224,13 +266,19 @@ class EventLoop:
         # and direct configurations order identically at shared instants.
         # Everything else stays FIFO. Node events carry their node's
         # version so a reschedule can orphan them in place.
-        if kind is EventKind.ROUTE:
+        if (kind is EventKind.ROUTE or kind is EventKind.NODE_FAULT
+                or kind is EventKind.NODE_RECOVER):
             prio = 0
         elif kind is EventKind.POLICY_TICK:
             prio = 2
         else:
             prio = 1
-        ver = self._ver[node] if node >= 0 else 0
+        if node >= 0:
+            ver = self._ver[node]
+        elif kind is EventKind.ROUTE:
+            ver = self._route_ver
+        else:
+            ver = 0
         heapq.heappush(self._heap,
                        (t, prio, next(self._seq), kind, node, ver))
 
@@ -258,12 +306,21 @@ class EventLoop:
         a move, billed as a DVFS transition like any other."""
         if not bands:
             return
-        for node, band in zip(self.nodes, bands):
+        faults = self.faults
+        for i, (node, band) in enumerate(zip(self.nodes, bands)):
             if band is None:
                 continue
             lo, hi = band
             if lo > hi:
                 lo, hi = hi, lo
+            if faults is not None:
+                # remember the coordinator's band and govern by its
+                # intersection with any live thermal envelope
+                self._coord_band[i] = (lo, hi)
+                cap = faults.states[i].thermal_cap_mhz
+                if cap is not None:
+                    hi = min(hi, cap)
+                    lo = min(lo, hi)
             set_band = getattr(node.policy, "set_band", None)
             if set_band is not None:
                 set_band(lo, hi)
@@ -307,8 +364,18 @@ class EventLoop:
         node's outstanding event supersedes it (version bump); a drained
         node comes back to life."""
         t_end = self.t_end
+        faults = self.faults
         touched = {}
         for idx, req in self.router.pop_due(t):
+            if faults is not None and faults.states[idx].down:
+                # the target died while this request was in flight:
+                # bounce it back through the retry path instead of
+                # delivering into the void
+                eng = self.nodes[idx].engine
+                if eng.inflight > 0:
+                    eng.inflight -= 1
+                self._reroute(req, t)
+                continue
             self.nodes[idx].engine.deliver(req, t)
             touched[idx] = True
         self.counts[EventKind.ROUTE] += 1
@@ -336,6 +403,9 @@ class EventLoop:
         nxt = self.router.next_time()
         if nxt is not None and (t_end is None or nxt < t_end):
             self._push(nxt, EventKind.ROUTE, -1)
+            self._route_t = nxt
+        else:
+            self._route_t = None
 
     def _fire_policy_tick(self, t: float, i: int) -> None:
         """One wall-clock policy decision for node ``i``: the policy's
@@ -345,6 +415,10 @@ class EventLoop:
         poller doesn't stop polling an idle server)."""
         node = self.nodes[i]
         eng = node.engine
+        fs = getattr(eng, "fault_state", None)
+        if fs is not None and fs.down:
+            self._tick_alive[i] = False      # dark: recovery restarts it
+            return
         if (self._sched_t[i] is None and not eng.has_work
                 and getattr(eng, "inflight", 0) == 0):
             self._tick_alive[i] = False      # drained: a ROUTE revives it
@@ -360,6 +434,162 @@ class EventLoop:
             self._push(nxt, EventKind.POLICY_TICK, i)
         else:
             self._tick_alive[i] = False
+
+    # -- fault injection (repro.serving.faults) ------------------------
+    def _work_remains(self) -> bool:
+        """Does the loop still owe anyone service? Under faults, a fully
+        dark fleet holding unserved requests must keep its fault (and
+        fleet) event trains alive until a recovery drains them; healthy
+        loops keep the historical live-nodes-or-in-flight test."""
+        if self._live > 0 or self._router_pending():
+            return True
+        if self.faults is not None:
+            return any(n.engine.has_work for n in self.nodes)
+        return False
+
+    def _arm_fault_event(self) -> None:
+        """Arm the loop's single outstanding fault event at the model's
+        next transition (constructor seed and post-fire re-arm)."""
+        fm = self.faults
+        nxt = fm.next_time()
+        if nxt is None or (self.t_end is not None and nxt >= self.t_end):
+            return
+        kind = (EventKind.NODE_FAULT if fm.next_is_onset()
+                else EventKind.NODE_RECOVER)
+        self._push(nxt, kind, -1)
+
+    def _fire_faults(self, t: float, kind: EventKind) -> None:
+        """Apply every fault transition due at ``t`` and re-arm the
+        train while anything is left to serve."""
+        for action in self.faults.pop_due(t):
+            if action.kind == "crash":
+                self._crash_node(action.node, t)
+            elif action.kind == "recover":
+                self._recover_node(action.node, t)
+            elif action.kind == "thermal-on":
+                self._thermal_flip(action.node, action.cap_mhz)
+            else:                              # thermal-off
+                self._thermal_flip(action.node, None)
+        self.counts[kind] += 1
+        if self._work_remains():
+            self._arm_fault_event()
+
+    def _arm_route(self, t: float) -> None:
+        """Ensure a ROUTE event is armed no later than ``t``: re-routes
+        can land ahead of the router's armed event — or revive a train
+        that ended. At most one ROUTE event stays live (versioning)."""
+        if self.t_end is not None and t >= self.t_end:
+            return
+        if self._route_t is not None and self._route_t <= t:
+            return
+        if self._route_t is not None:
+            self._route_ver += 1          # orphan the later-armed event
+        self._push(t, EventKind.ROUTE, -1)
+        self._route_t = t
+
+    def _crash_node(self, i: int, t: float) -> None:
+        """Node ``i`` goes dark at ``t``: orphan its outstanding event,
+        evacuate its running batch (KV state lost, recompute-style), its
+        queue, its already-arrived undelivered heap entries, and its
+        in-flight deliveries, re-routing every evacuee through the retry
+        path. Arrivals the node owns that haven't happened yet stay
+        owned — they re-enter service after recovery."""
+        eng = self.nodes[i].engine
+        if self._sched_t[i] is not None:
+            self._ver[i] += 1                  # orphan the heap entry
+            self._sched_t[i] = None
+            self._live -= 1
+        sched = eng.sched
+        evac: List[object] = []
+        for req in list(sched.running.values()):
+            del sched.running[req.request_id]
+            sched.kv.free(req, preempted=True)
+            req.state = RequestState.WAITING
+            req.prefilled = 0
+            req.generated = 0
+            req.cached_tokens = 0
+            evac.append(req)
+        while sched.waiting:
+            evac.append(sched.waiting.popleft())
+        while eng._pending and eng._pending[0][0] <= t:
+            evac.append(heapq.heappop(eng._pending)[2])
+        for _, req in self.router.extract_node(i):
+            if eng.inflight > 0:
+                eng.inflight -= 1
+            evac.append(req)
+        for req in evac:
+            self._reroute(req, t)
+
+    def _reroute(self, req, t: float) -> None:
+        """Retry path for an evacuated/bounced request: re-deliver to a
+        surviving node after exponential backoff (priced through the
+        network model when one exists), or drop it once the retry budget
+        is spent."""
+        fm = self.faults
+        if req.retries >= fm.config.retry_budget:
+            req.state = RequestState.DROPPED
+            fm.dropped.append(req)
+            return
+        attempt = req.retries
+        req.retries += 1
+        fm.retries += 1
+        base = t + fm.backoff_delay(attempt)
+        deliver = (fm.network.delivery_time(base)
+                   if fm.network is not None else base)
+        j = fm.pick_node(self.engines, req)
+        self.nodes[j].engine.inflight += 1
+        fm.reroutes += 1
+        req.delivery_time = deliver
+        self.router.push(deliver, j, req)
+        self._arm_route(deliver)
+
+    def _recover_node(self, i: int, t: float) -> None:
+        """Node ``i`` comes back at ``t``: its clock jumps over the
+        outage WITHOUT billing idle energy (the node was dark, not
+        idling), it rejoins the event heap, and a dead POLICY_TICK train
+        restarts."""
+        node = self.nodes[i]
+        eng = node.engine
+        if t > eng.clock:
+            eng.clock = t
+        if self._sched_t[i] is None and (self.t_end is None
+                                         or eng.clock < self.t_end):
+            if self._schedule_node(i):
+                self._live += 1
+        if (self.policy_tick_mode == "tick" and not self._tick_alive[i]
+                and node.policy is not None
+                and (self.t_end is None or t < self.t_end)):
+            self._push(t, EventKind.POLICY_TICK, i)
+            self._tick_alive[i] = True
+
+    def _thermal_flip(self, i: int, cap: Optional[float]) -> None:
+        """Apply a thermal-throttle flip to node ``i`` (the model already
+        flipped its state): onset force-clamps the running frequency
+        under the cap — a DVFS transition billed like any other, exempt
+        from stick/lag (hardware throttling bypasses the flaky driver
+        interface) — and the governing band becomes coordinator band ∩
+        thermal envelope; release restores the coordinator's band."""
+        node = self.nodes[i]
+        eng = node.engine
+        if cap is not None and eng.frequency > cap:
+            fs = self.faults.states[i]
+            fs.bypass = True
+            try:
+                eng.set_frequency(cap)
+            finally:
+                fs.bypass = False
+        set_band = getattr(node.policy, "set_band", None)
+        if set_band is None:
+            return
+        hw = eng.hardware
+        base = self._coord_band[i]
+        if base is None:
+            base = (hw.f_min, hw.f_max)
+        if cap is None:
+            set_band(*base)
+        else:
+            hi = min(base[1], cap)
+            set_band(min(base[0], hi), hi)
 
     # ------------------------------------------------------------------
     def _run_single(self) -> int:
@@ -397,18 +627,20 @@ class EventLoop:
 
     def run(self) -> int:
         if (len(self.nodes) == 1 and self.fleet_policy is None
-                and self.router is None
+                and self.router is None and self.faults is None
                 and self.policy_tick_mode == "iteration"):
             return self._run_single()
         t_end = self.t_end
         iteration_gated = self.policy_tick_mode == "iteration"
         while self._heap and self.steps < self.max_iters:
             t, _, _, kind, i, ver = heapq.heappop(self._heap)
+            if self.on_event is not None:
+                self.on_event(self, kind, t)
             if t > self.now:
                 self.now = t
 
             if kind is EventKind.FLEET_TICK:
-                if self._live == 0 and not self._router_pending():
+                if not self._work_remains():
                     continue                   # fleet dies with nodes
                 self.fleet_policy.act(self.engines, t)
                 self._propagate_bands(getattr(self.fleet_policy, "bands",
@@ -420,8 +652,14 @@ class EventLoop:
                     self._push(nxt, EventKind.FLEET_TICK, -1)
                 continue
 
+            if (kind is EventKind.NODE_FAULT
+                    or kind is EventKind.NODE_RECOVER):
+                self._fire_faults(t, kind)
+                continue
+
             if kind is EventKind.ROUTE:
-                self._fire_route(t)
+                if ver == self._route_ver:
+                    self._fire_route(t)
                 continue
 
             if kind is EventKind.POLICY_TICK:
@@ -456,10 +694,12 @@ def drive(nodes: Sequence[EngineNode], *, t_end: Optional[float] = None,
           max_iters: int = 10_000_000,
           fleet_policy: Optional[object] = None,
           router: Optional[object] = None,
-          policy_tick_mode: str = "iteration") -> int:
+          policy_tick_mode: str = "iteration",
+          fault_model: Optional[object] = None) -> int:
     """Advance ``nodes`` through the shared event loop until no work
     remains (or ``t_end``/``max_iters``); returns engine steps executed.
     Thin facade over :class:`EventLoop` for the common one-shot case."""
     return EventLoop(nodes, fleet_policy=fleet_policy, t_end=t_end,
                      max_iters=max_iters, router=router,
-                     policy_tick_mode=policy_tick_mode).run()
+                     policy_tick_mode=policy_tick_mode,
+                     fault_model=fault_model).run()

@@ -229,6 +229,10 @@ class InferenceEngine:
         #: requests routed to this engine but still in the network (the
         #: router will ``deliver`` them); counted as waiting load
         self.inflight = 0
+        #: per-node fault surface (``repro.serving.faults.NodeFaultState``)
+        #: attached by a bound FaultModel; None = healthy simulation, and
+        #: every fault hook below is a single None check
+        self.fault_state = None
         self.finished: List[Request] = []
 
     # ------------------------------------------------------------------
@@ -248,6 +252,17 @@ class InferenceEngine:
             self.inflight -= 1
 
     def set_frequency(self, f_mhz: float) -> None:
+        fs = self.fault_state
+        if fs is not None:
+            # flaky actuation: the call may silently stick (lost) or lag
+            # (extra stall billed to the clock); a thermal throttle clamps
+            # whatever does land
+            eff, stall = fs.filter_set_frequency(f_mhz)
+            if eff is None:
+                return
+            f_mhz = eff
+            if stall > 0.0:
+                self.clock += stall
         sp = self.hardware
         f = min(max(f_mhz, sp.f_min), sp.f_max)
         if f != self.frequency:
@@ -369,6 +384,7 @@ class InferenceEngine:
         c.generation_tokens_total += len(plan.decode) + gen_from_prefill
         c.iterations_total += 1
         c.requests_finished_total += len(finished)
+        c.requests_dropped_total = len(sched.dropped)
         # TTFT is accounted when the scheduler assigns first_token_time —
         # not by replaying a float-equality check against the clock, which
         # could silently drop samples. (Guarded: the event list is empty on

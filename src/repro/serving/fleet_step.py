@@ -190,6 +190,11 @@ class BatchedFleetLoop:
                 raise NotImplementedError(
                     "step_mode='batched' does not support in-flight "
                     "routed requests (network models)")
+            if getattr(eng, "fault_state", None) is not None:
+                raise NotImplementedError(
+                    "step_mode='batched' does not support an active "
+                    "fault model (crash evacuation and re-routing need "
+                    "the event heap)")
         self.fleet_policy = fleet_policy
         self.max_iters = max_iters
         self.policy_tick_mode = policy_tick_mode

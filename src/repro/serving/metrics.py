@@ -19,6 +19,9 @@ class EngineCounters:
     generation_tokens_total: int = 0
     iterations_total: int = 0
     requests_finished_total: int = 0
+    # deadline-expired requests shed at admission (load shedding; fault
+    # retry-budget drops are accounted at the fault model, not per engine)
+    requests_dropped_total: int = 0
     prefix_cache_hits_total: int = 0
     prefix_cache_queries_total: int = 0
     energy_joules_total: float = 0.0
@@ -52,6 +55,7 @@ class MetricsExporter:
             "vllm:generation_tokens_total": c.generation_tokens_total,
             "vllm:iterations_total": c.iterations_total,
             "vllm:requests_finished_total": c.requests_finished_total,
+            "vllm:requests_dropped_total": c.requests_dropped_total,
             "vllm:prefix_cache_hits_total": c.prefix_cache_hits_total,
             "vllm:prefix_cache_queries_total": c.prefix_cache_queries_total,
             "vllm:energy_joules_total": c.energy_joules_total,

@@ -192,6 +192,25 @@ class DeliverySchedule:
                 first[node] = t
         return first
 
+    def extract_node(self, node_index: int) -> List[Tuple[float, object]]:
+        """Remove and return every in-flight delivery addressed to
+        ``node_index``, in (delivery time, submit) order — the crash path
+        (``repro.serving.faults``): requests still traversing the network
+        toward a node that just died are pulled back and re-routed
+        instead of delivered into the void. The surviving entries keep
+        their order exactly."""
+        if not self._heap:
+            return []
+        mine = [(t, s, req) for t, s, node, req in self._heap
+                if node == node_index]
+        if not mine:
+            return []
+        keep = [e for e in self._heap if e[2] != node_index]
+        self._heap = keep
+        heapq.heapify(keep)
+        mine.sort()
+        return [(t, req) for t, _, req in mine]
+
     def pop_due(self, t: float) -> List[Tuple[int, object]]:
         """All deliveries with ``delivery_time <= t``, in (time, submit)
         order — one ROUTE event delivers every request due at its

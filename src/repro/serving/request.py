@@ -21,6 +21,7 @@ class RequestState(enum.Enum):
     RUNNING = "running"       # prefilling or decoding
     PREEMPTED = "preempted"
     FINISHED = "finished"
+    DROPPED = "dropped"       # shed: deadline expired or retries exhausted
 
 
 @dataclasses.dataclass(slots=True)
@@ -31,6 +32,13 @@ class Request:
     template_id: int = 0             # prefix-cache identity (hidden)
     template_frac: float = 0.9       # fraction of prompt shared w/ template
     request_id: int = dataclasses.field(default_factory=lambda: next(_ids))
+    #: load-shedding budget: a request still WAITING ``deadline_s`` after
+    #: its arrival is dropped at admission instead of ballooning TTFT
+    #: (None = never sheds, the historical behavior)
+    deadline_s: Optional[float] = None
+    #: crash re-route attempts consumed (fault injection; see
+    #: ``repro.serving.faults`` — bounded by the model's retry budget)
+    retries: int = 0
 
     # execution progress
     state: RequestState = RequestState.WAITING

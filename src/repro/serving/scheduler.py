@@ -64,10 +64,16 @@ class ContinuousBatchingScheduler:
         # ``pop_first_token_events`` call — the engine drains this to
         # account TTFT at assignment time (no float-equality replay)
         self._first_token_events: List[Request] = []
+        # deadline-expired requests shed at admission; the flag keeps the
+        # no-deadline hot path free of per-request deadline checks
+        self.dropped: List[Request] = []
+        self._has_deadlines = False
 
     # ------------------------------------------------------------------
     def add_request(self, req: Request) -> None:
         req.state = RequestState.WAITING
+        if req.deadline_s is not None:
+            self._has_deadlines = True
         self.waiting.append(req)
 
     @property
@@ -89,15 +95,30 @@ class ContinuousBatchingScheduler:
         A request that does not fit the KV budget is skipped (not
         head-of-line blocking) and keeps its queue position relative to the
         other non-admitted requests.
+
+        Requests carrying a ``deadline_s`` that has already expired are
+        shed here (``self.dropped``) instead of admitted — graceful load
+        shedding for overloaded or post-crash queues. Traces without
+        deadlines never pay for the check.
         """
         admitted: List[Request] = []
-        if not self.waiting or len(self.running) >= self.max_num_seqs:
+        if not self.waiting or (len(self.running) >= self.max_num_seqs
+                                and not self._has_deadlines):
             return admitted
         skipped: List[Request] = []
         for _ in range(len(self.waiting)):
-            if len(self.running) >= self.max_num_seqs:
+            if (len(self.running) >= self.max_num_seqs
+                    and not self._has_deadlines):
                 break
             req = self.waiting.popleft()
+            if (req.deadline_s is not None
+                    and now - req.arrival_time > req.deadline_s):
+                req.state = RequestState.DROPPED
+                self.dropped.append(req)
+                continue
+            if len(self.running) >= self.max_num_seqs:
+                skipped.append(req)
+                continue
             total = req.prompt_len + req.output_len
             if self.kv.try_allocate(req, total):
                 req.state = RequestState.RUNNING

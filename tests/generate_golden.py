@@ -31,6 +31,10 @@ from repro.configs import get_config
 from repro.core import AGFTTuner
 from repro.energy import A6000
 from repro.serving import EngineConfig, EngineNode, EventLoop, InferenceEngine
+# imported for effect in CI's golden-drift job: loading the fault-injection
+# module (and its numpy RNG machinery) must never perturb golden
+# regeneration — the healthy path is fault-model-free by construction
+import repro.serving.faults  # noqa: F401
 from repro.workloads import PROTOTYPES, generate_requests
 
 HERE = os.path.dirname(os.path.abspath(__file__))
