@@ -222,6 +222,24 @@ def _faults_reduce(results, quick):
                  f"{churn.get('naive_lost_requests', 0)}"), out
 
 
+def _phases2d_units(quick, deps):
+    from benchmarks import tab_phases_2d
+    return [(tab_phases_2d._cell, (a,))
+            for a in tab_phases_2d.unit_args(
+                tab_phases_2d.QUICK_DURATION_S if quick
+                else tab_phases_2d.FULL_DURATION_S)]
+
+
+def _phases2d_reduce(results, quick):
+    from benchmarks import tab_phases_2d
+    out = tab_phases_2d._assemble(results, quiet=True)
+    s = out["summary"]
+    return 0.0, (f"2d_vs_best1d_edp"
+                 f"{s.get('agft2d_vs_best1d_edp_pct', 0):+.1f}%;"
+                 f"2d_vs_rule_edp"
+                 f"{s.get('agft2d_vs_rule_edp_pct', 0):+.1f}%"), out
+
+
 def _powercap_units(quick, deps):
     from benchmarks import tab_powercap
     return [(tab_powercap._cell, (a,))
@@ -261,6 +279,8 @@ GRID = [
                                 "reduce": _network_reduce}),
     ("tab_faults_robustness", {"units": _faults_units,
                                "reduce": _faults_reduce}),
+    ("tab_phases_2d", {"units": _phases2d_units,
+                       "reduce": _phases2d_reduce}),
     ("tab_megafleet_batched", _mono(_megafleet)),
     ("roofline_terms", _mono(_roofline)),
 ]

@@ -4,7 +4,10 @@ and coefficients of variation (CV) of the window metrics. Extended with
 the switching-cost-aware variant (``agft-switchcost``, ROADMAP /
 arXiv:2410.11855): DVFS transitions are priced into the reward, so the row
 quantifies how much actuation churn the penalty removes and what it costs
-in EDP."""
+in EDP. A second extension row (``phase2d``) runs the phase-disaggregated
+``agft-2d`` tuner on the same trace, treating the whole 1-D action space
+as the ablated configuration — the Azure-trace headline comparison lives
+in ``tab_phases_2d.py``."""
 from __future__ import annotations
 
 
@@ -26,7 +29,8 @@ def _run(tcfg: AGFTConfig, n_requests: int, rate: float, seed: int,
     # any registered windowed policy works here; only agft takes a cfg
     tuner = get_policy(policy, hardware=A6000,
                        **({"cfg": tcfg}
-                          if policy in ("agft", "agft-switchcost") else {}))
+                          if policy in ("agft", "agft-switchcost",
+                                        "agft-2d") else {}))
     eng.drain(policy=tuner)
     ws = [h for h in tuner.history
           if h["energy_j"] is not None and h["tpot"] is not None]
@@ -58,6 +62,7 @@ def run(n_requests: int = 1500, rate: float = 3.0, seed: int = 2,
         n_requests, rate, seed)
     switchcost = _run(AGFTConfig(), n_requests, rate, seed,
                       policy="agft-switchcost")
+    phase2d = _run(AGFTConfig(), n_requests, rate, seed, policy="agft-2d")
 
     def diff(a, b, key, field):
         return 100 * (b[key][field] / a[key][field] - 1) \
@@ -65,7 +70,7 @@ def run(n_requests: int = 1500, rate: float = 3.0, seed: int = 2,
 
     out = {
         "full": full, "no_grain": nograin, "no_pruning": nopruning,
-        "switchcost": switchcost,
+        "switchcost": switchcost, "phase2d": phase2d,
         "tab4_no_grain_vs_full": {
             k: {"mean_diff_pct": diff(full, nograin, k, "mean"),
                 "cv_diff_pct": diff(full, nograin, k, "cv")}
@@ -79,6 +84,12 @@ def run(n_requests: int = 1500, rate: float = 3.0, seed: int = 2,
             "switch_reduction_pct": 100 * (
                 1 - switchcost["switches"] / max(full["switches"], 1)),
             **{k: {"mean_diff_pct": diff(full, switchcost, k, "mean")}
+               for k in ("energy", "edp", "ttft", "tpot", "e2e")},
+        },
+        "tab_2d_vs_full": {
+            "switches_full": full["switches"],
+            "switches_2d": phase2d["switches"],
+            **{k: {"mean_diff_pct": diff(full, phase2d, k, "mean")}
                for k in ("energy", "edp", "ttft", "tpot", "e2e")},
         },
         "paper": {
@@ -99,6 +110,11 @@ def run(n_requests: int = 1500, rate: float = 3.0, seed: int = 2,
               f"{sc['switches_switchcost']} "
               f"({sc['switch_reduction_pct']:+.0f}% fewer), "
               f"edp {sc['edp']['mean_diff_pct']:+.1f}%")
+        p2 = out["tab_2d_vs_full"]
+        print(f"phase-2d vs full:   "
+              f"energy {p2['energy']['mean_diff_pct']:+.1f}%, "
+              f"edp {p2['edp']['mean_diff_pct']:+.1f}%, "
+              f"switches {p2['switches_full']} -> {p2['switches_2d']}")
     return out
 
 

@@ -1,0 +1,143 @@
+"""Phase-disaggregated DVFS ablation (1-D vs 2-D action space).
+
+Serves the Azure production trace (fig11's workload) under five
+controllers on one node and compares the phase-disaggregated tuner
+against the best single-frequency one:
+
+  ``agft-1d``           the paper's tuner (LinUCB), one clock per node
+  ``agft-1d-thompson``  the Thompson-sampling 1-D variant
+  ``agft-2d``           AGFT over ``(f_prefill, f_decode)`` pairs seeded
+                        around the analytic per-phase EDP optima
+                        (``repro.core.tuner2d``)
+  ``greenllm-rule``     static per-phase clocks from the same sweep —
+                        right clocks, no adaptation
+  ``static-fmax``       locked clocks at f_max (the un-tuned anchor)
+
+The physics says 2-D has real headroom: on the A6000/llama3-3b pair the
+prefill optimum sits ~1395 MHz (compute-bound — the roofline rewards
+fast clocks) and the decode optimum ~1170 MHz (bandwidth-bound — fast
+clocks wait on HBM at higher power), so any single clock is a ~225 MHz
+compromise against one phase or the other. The headline summary metric,
+``agft2d_vs_best1d_edp_pct``, is the EDP delta of the 2-D tuner against
+the BEST 1-D AGFT variant (negative = 2-D wins); the ``tab4_5_ablation``
+table carries the matching ``phase2d`` ablation row.
+"""
+from __future__ import annotations
+
+import argparse
+from typing import Dict, List, Optional, Tuple
+
+from benchmarks.common import BASE_RATE, run_workload, save_json, \
+    strip_engine
+
+#: (variant, registry policy name, policy kwargs); None policy = fixed
+#: clocks at f_max
+VARIANTS: List[Tuple[str, Optional[str], Dict]] = [
+    ("agft-1d", "agft", {}),
+    ("agft-1d-thompson", "agft", {"strategy": "thompson"}),
+    ("agft-2d", "agft-2d", {}),
+    ("greenllm-rule", "greenllm-rule", {}),
+    ("static-fmax", None, {}),
+]
+ONE_D_AGFT = ("agft-1d", "agft-1d-thompson")
+FULL_DURATION_S = 1200.0
+QUICK_DURATION_S = 240.0
+
+
+def _cell(args: tuple) -> Dict:
+    variant, policy, kwargs, duration, rate, seed = args
+    r = run_workload("azure", azure_duration=duration, rate=rate,
+                     seed=seed, policy=policy,
+                     policy_kwargs=kwargs or None)
+    pol = r["policy_obj"]
+    row = strip_engine(r)
+    row["variant"] = variant
+    if pol is not None and hasattr(pol, "bank"):
+        row["n_arms"] = len(pol.bank.arms)
+        row["converged"] = bool(pol.converged)
+        row["switches"] = pol.switch_count
+        row["final_action"] = pol.prev_action
+    if getattr(pol, "seed_pair", None) is not None:
+        row["seed_pair"] = list(pol.seed_pair)
+    return row
+
+
+def unit_args(duration: float, rate: float = BASE_RATE,
+              seed: int = 11) -> List[tuple]:
+    """One unit per controller variant, all over the same seeded trace."""
+    return [(v, p, kw, duration, rate, seed) for v, p, kw in VARIANTS]
+
+
+def _assemble(rows: List[Dict], quiet: bool = False) -> Dict:
+    grid = {r["variant"]: r for r in rows}
+
+    summary: Dict[str, object] = {}
+    best_1d = min((v for v in ONE_D_AGFT if v in grid),
+                  key=lambda v: grid[v]["edp"], default=None)
+    two_d = grid.get("agft-2d")
+    if best_1d and two_d:
+        ref = grid[best_1d]
+        summary["best_1d_variant"] = best_1d
+        summary["agft2d_vs_best1d_edp_pct"] = 100.0 * (
+            two_d["edp"] / ref["edp"] - 1.0)
+        summary["agft2d_vs_best1d_energy_pct"] = 100.0 * (
+            two_d["energy_j"] / ref["energy_j"] - 1.0)
+    rule = grid.get("greenllm-rule")
+    if rule and two_d:
+        summary["agft2d_vs_rule_edp_pct"] = 100.0 * (
+            two_d["edp"] / rule["edp"] - 1.0)
+    static = grid.get("static-fmax")
+    if static and two_d:
+        summary["agft2d_vs_static_edp_pct"] = 100.0 * (
+            two_d["edp"] / static["edp"] - 1.0)
+        summary["agft2d_vs_static_energy_pct"] = 100.0 * (
+            two_d["energy_j"] / static["energy_j"] - 1.0)
+
+    out = {"grid": grid, "summary": summary}
+    save_json("tab_phases_2d.json", out)
+    if not quiet:
+        print(f"{'variant':>18s} {'finished':>8s} {'energy':>9s} "
+              f"{'tpot':>8s} {'edp':>9s} {'transitions':>11s}")
+        for v, _, _ in VARIANTS:
+            r = grid.get(v)
+            if r is None:
+                continue
+            print(f"{v:>18s} {r['finished']:8d} "
+                  f"{r['energy_j'] / 1e3:8.1f}k {r['tpot_s'] * 1e3:6.2f}ms "
+                  f"{r['edp']:9.1f} {r['freq_transitions']:11d}")
+        d = summary.get("agft2d_vs_best1d_edp_pct")
+        if d is not None:
+            print(f"agft-2d vs best 1-D ({summary['best_1d_variant']}): "
+                  f"edp{d:+.1f}%")
+    return out
+
+
+def run(duration: float = FULL_DURATION_S, rate: float = BASE_RATE,
+        seed: int = 11, quiet: bool = False) -> Dict:
+    rows = [_cell(a) for a in unit_args(duration, rate, seed)]
+    return _assemble(rows, quiet=quiet)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="240s trace instead of 1200s (CI smoke cell)")
+    ap.add_argument("--duration", type=float, default=0.0)
+    ap.add_argument("--check", action="store_true",
+                    help="fail unless agft-2d beats the best 1-D AGFT "
+                         "variant on EDP (the PR's acceptance claim)")
+    args = ap.parse_args()
+    dur = args.duration or (QUICK_DURATION_S if args.quick
+                            else FULL_DURATION_S)
+    out = run(duration=dur)
+    if args.check:
+        delta = out["summary"].get("agft2d_vs_best1d_edp_pct")
+        if delta is None or delta >= 0.0:
+            raise SystemExit(
+                f"CHECK FAILED: agft-2d does not beat the best 1-D AGFT "
+                f"on EDP (delta {delta})")
+        print(f"check passed: 2-D beats best 1-D on EDP ({delta:+.1f}%)")
+
+
+if __name__ == "__main__":
+    main()

@@ -19,6 +19,13 @@ Arm order is deterministic: always ascending frequency, regardless of
 ``rebuild``/``remove`` history, so tie-breaks and Thompson's RNG-draw-to-arm
 pairing never depend on action-space mutation order.
 
+Actions are opaque sortable keys: 1-D banks key arms by ``float``
+frequency; 2-D phase-disaggregated banks (``repro.core.tuner2d``) key them
+by ``(f_prefill, f_decode)`` pairs, which sort lexicographically so the
+deterministic-order guarantees carry over. The linear model per arm is
+unchanged — only band legality branches on the key kind (a pair is legal
+when BOTH clocks are in band).
+
 Frequency bands (hierarchical fleet control): ``set_band(f_lo, f_hi)``
 restricts *selection* to arms inside ``[f_lo, f_hi]`` via a reversible
 boolean mask over the stack — statistics are never destroyed, so a band
@@ -34,6 +41,17 @@ from collections.abc import Mapping
 from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
+
+
+def _key(f):
+    """Canonical arm key: ``float`` for 1-D frequency actions,
+    ``(float, float)`` for 2-D ``(f_prefill, f_decode)`` actions (see
+    ``repro.core.tuner2d``). Pairs sort lexicographically, preserving the
+    bank's deterministic ascending-action order; a bank holds one kind of
+    key for its whole life (mixing is a caller bug)."""
+    if isinstance(f, tuple):
+        return (float(f[0]), float(f[1]))
+    return float(f)
 
 
 class LinUCBArm:
@@ -168,7 +186,7 @@ class _ArmMap(Mapping):
         self._bank = bank
 
     def __getitem__(self, f) -> _ArmView:
-        f = float(f)
+        f = _key(f)
         if f not in self._bank._index:
             raise KeyError(f)
         return _ArmView(self._bank, f)
@@ -180,7 +198,7 @@ class _ArmMap(Mapping):
         return len(self._bank._f)
 
     def __contains__(self, f) -> bool:           # avoid Mapping's try/except
-        return float(f) in self._bank._index
+        return _key(f) in self._bank._index
 
 
 class LinUCBBank:
@@ -203,12 +221,15 @@ class LinUCBBank:
         self.arms = _ArmMap(self)
         self._band: Optional[Tuple[float, float]] = None
         self._legal: Optional[np.ndarray] = None   # bool mask; None = all
-        self._alloc(sorted({float(f) for f in frequencies}))
+        self._alloc(sorted({_key(f) for f in frequencies}))
 
     # -- storage -------------------------------------------------------
     def _alloc(self, freqs: List[float]) -> None:
         n, d = len(freqs), self.dim
         self._f: List[float] = freqs              # ascending, deduplicated
+        #: pair-keyed (2-D action) banks branch only in band legality;
+        #: every selection/update path is key-agnostic
+        self._pair = bool(freqs) and isinstance(freqs[0], tuple)
         self._index: Dict[float, int] = {f: i for i, f in enumerate(freqs)}
         eye = np.eye(d)
         self._A = np.broadcast_to(eye * self.ridge, (n, d, d)).copy()
@@ -260,6 +281,19 @@ class LinUCBBank:
             return
         lo, hi = self._band
         f = np.asarray(self._f)
+        if self._pair:
+            # 2-D actions: the band intersects BOTH axes — a pair is legal
+            # only when prefill AND decode clocks lie inside [lo, hi], so
+            # hierarchy/thermal clamps compose with phase disaggregation.
+            # Empty-band fallback: the pair nearest (Euclidean) to the
+            # midpoint corner (mid, mid).
+            legal = ((f >= lo - 1e-9) & (f <= hi + 1e-9)).all(axis=1)
+            if not legal.any() and len(f):
+                mid = (lo + hi) / 2.0
+                d2 = ((f - mid) ** 2).sum(axis=1)
+                legal[int(np.argmin(d2))] = True
+            self._legal = legal
+            return
         legal = (f >= lo - 1e-9) & (f <= hi + 1e-9)
         if not legal.any() and len(f):
             legal[int(np.argmin(np.abs(f - (lo + hi) / 2.0)))] = True
@@ -267,7 +301,7 @@ class LinUCBBank:
 
     def is_legal(self, f: float) -> bool:
         return (self._legal is None
-                or bool(self._legal[self._index[float(f)]]))
+                or bool(self._legal[self._index[_key(f)]]))
 
     def n_legal(self) -> int:
         return (len(self._f) if self._legal is None
@@ -304,7 +338,7 @@ class LinUCBBank:
         return list(zip(self._f, n.tolist(), mr.tolist(), me.tolist()))
 
     def remove(self, f: float) -> None:
-        i = self._index.get(float(f))
+        i = self._index.get(_key(f))
         if i is None:
             return
         keep = np.ones(len(self._f), dtype=bool)
@@ -321,11 +355,11 @@ class LinUCBBank:
         old_index, old = self._index, (self._A, self._A_inv, self._b,
                                        self._theta, self._n,
                                        self._reward_sum, self._edp_sum)
-        proto = old_index.get(float(warm_from)) if warm_from is not None \
+        proto = old_index.get(_key(warm_from)) if warm_from is not None \
             else None
         if proto is not None and old[4][proto] == 0:
             proto = None                          # untouched anchor: no prior
-        self._alloc(sorted({float(f) for f in frequencies}))
+        self._alloc(sorted({_key(f) for f in frequencies}))
         for f, i in self._index.items():
             src = old_index.get(f, proto)
             if src is None:
@@ -343,7 +377,7 @@ class LinUCBBank:
                    edp: Optional[float] = None) -> None:
         """Sherman-Morrison rank-1 update of one arm, in place on the
         stacked arrays (arithmetic-identical to ``LinUCBArm.update``)."""
-        i = self._index[float(f)]
+        i = self._index[_key(f)]
         self._A[i] += np.outer(x, x)
         A_inv = self._A_inv[i]
         Ax = A_inv @ x
@@ -364,7 +398,7 @@ class LinUCBBank:
         batches credits yet (the tuner settles one window at a time via
         ``update_arm``); this is the vectorized-bank API for controllers
         that do, kept numerically equivalent by the hot-path tests."""
-        idx = np.array([self._index[float(f)] for f in fs])
+        idx = np.array([self._index[_key(f)] for f in fs])
         if len(set(idx.tolist())) != len(idx):
             raise ValueError("update_arms requires distinct arms; "
                              "sequential rank-1 updates to one arm do not "

@@ -17,6 +17,12 @@ Under a fleet-assigned frequency band (``LinUCBBank.set_band``, see
 band-legal arm: pruning is permanent, the band is not, so destroying the
 only in-band action would leave the coordinator nothing to govern. With no
 band set every arm is legal and the guard is inert.
+
+All three mechanisms also apply to 2-D ``(f_prefill, f_decode)`` action
+spaces (``repro.core.tuner2d``): extreme and historical pruning are
+key-agnostic (they read per-arm reward/EDP statistics), and the cascade
+generalizes axis-wise — a pair pruned with both clocks in the slow half
+drags down every pair it dominates on both axes.
 """
 from __future__ import annotations
 
@@ -63,7 +69,20 @@ class PruningFramework:
                          "mechanism": mechanism})
 
     def _cascade(self, bank: LinUCBBank, f: float, round_idx: int) -> None:
-        if f >= self.cfg.cascade_fraction_of_fmax * self.f_max:
+        frac = self.cfg.cascade_fraction_of_fmax * self.f_max
+        if isinstance(f, tuple):
+            # 2-D actions: the physical argument generalizes axis-wise —
+            # if a pair with BOTH clocks in the slow half can't keep up,
+            # any pair it dominates (no faster on either axis) can't
+            # either. Pairs with one fast axis never trigger a cascade.
+            if f[0] >= frac or f[1] >= frac:
+                return
+            for g in list(bank.frequencies):
+                if (g[0] <= f[0] and g[1] <= f[1]
+                        and len(bank.arms) > self.cfg.min_arms):
+                    self._prune(bank, g, "cascade", round_idx)
+            return
+        if f >= frac:
             return
         for g in list(bank.frequencies):
             if g < f and len(bank.arms) > self.cfg.min_arms:

@@ -9,6 +9,12 @@ Periodically re-centers a fine-grained action space (anchor +/- 150 MHz at
   for the CURRENT context x_t — trust the mature model, focus exploration
   where it predicts the highest reward.
 
+2-D ``(f_prefill, f_decode)`` action spaces (``repro.core.tuner2d``)
+refine the same way with a product grid: per-axis windows centered on the
+anchor pair (coarser range/step — ``half_range_2d_mhz``/``step_2d_mhz`` —
+so the arm count stays learnable), filtered by the same permanent-prune
+set and band rules.
+
 Under a fleet-assigned frequency band (``repro.policies.hierarchy``) the
 anchor is already band-restricted (both ``best_historical`` and
 ``argmax_ucb`` select among legal arms only) and the candidate grid is
@@ -37,6 +43,11 @@ class RefinementConfig:
     stat_min_samples: int = 4
     half_range_mhz: float = 150.0
     step_mhz: float = 15.0
+    # 2-D (f_prefill, f_decode) action spaces refine on a coarser product
+    # grid per axis so arm count stays learnable (default 5x5 = 25 arms
+    # per refinement vs the 1-D grid's 21)
+    half_range_2d_mhz: float = 90.0
+    step_2d_mhz: float = 45.0
 
 
 class MixedMaturityRefinement:
@@ -53,17 +64,30 @@ class MixedMaturityRefinement:
         self._grid_cache: dict = {}
 
     # ------------------------------------------------------------------
-    def _candidate_grid(self, anchor: float) -> List[float]:
+    def _axis_grid(self, anchor: float, half_range: float,
+                   step: float) -> List[float]:
+        lo = max(self.f_min, anchor - half_range)
+        hi = min(self.f_max, anchor + half_range)
+        # np.float64 subclasses float, so round() on the tolist() floats
+        # is the same float.__round__ the array elements would use
+        grid = np.arange(lo, hi + 1e-9, step)
+        return [round(f, 3) for f in grid.tolist()]
+
+    def _candidate_grid(self, anchor) -> List[float]:
         cached = self._grid_cache.get(anchor)
         if cached is not None:
             return cached
         cfg = self.cfg
-        lo = max(self.f_min, anchor - cfg.half_range_mhz)
-        hi = min(self.f_max, anchor + cfg.half_range_mhz)
-        # np.float64 subclasses float, so round() on the tolist() floats
-        # is the same float.__round__ the array elements would use
-        grid = np.arange(lo, hi + 1e-9, cfg.step_mhz)
-        out = [round(f, 3) for f in grid.tolist()]
+        if isinstance(anchor, tuple):
+            # 2-D anchor: product of per-axis grids centered on the pair
+            # (coarser per-axis range/step — see RefinementConfig)
+            pf = self._axis_grid(anchor[0], cfg.half_range_2d_mhz,
+                                 cfg.step_2d_mhz)
+            de = self._axis_grid(anchor[1], cfg.half_range_2d_mhz,
+                                 cfg.step_2d_mhz)
+            out = [(a, b) for a in pf for b in de]
+        else:
+            out = self._axis_grid(anchor, cfg.half_range_mhz, cfg.step_mhz)
         self._grid_cache[anchor] = out
         return out
 
@@ -90,8 +114,13 @@ class MixedMaturityRefinement:
         grid = pruner.filter_candidates(self._candidate_grid(anchor))
         band = getattr(bank, "band", None)
         if band is not None:
-            grid = [f for f in grid
-                    if band[0] - 1e-9 <= f <= band[1] + 1e-9]
+            lo, hi = band[0] - 1e-9, band[1] + 1e-9
+            if isinstance(anchor, tuple):
+                # the band clips BOTH axes of a 2-D product grid
+                grid = [f for f in grid
+                        if lo <= f[0] <= hi and lo <= f[1] <= hi]
+            else:
+                grid = [f for f in grid if lo <= f <= hi]
         if len(grid) < 3:
             return None
         bank.rebuild(grid, warm_from=anchor)

@@ -163,10 +163,8 @@ class AGFTTuner:
             self._actuate(engine, f0, None, None, None, t=now)
             return f0
 
-        if fs is not None and (
-                fs.disrupted_since(w_start)
-                or (self.prev_action is not None
-                    and engine.frequency != self.prev_action)):
+        if fs is not None and (fs.disrupted_since(w_start)
+                               or self._diverged(engine)):
             # faulted/stale window: a crash, recovery, throttle flip, or
             # dropout touched it — or the actuator silently stuck and the
             # engine diverged from the issued frequency. Its telemetry
@@ -213,6 +211,13 @@ class AGFTTuner:
         return f
 
     # ------------------------------------------------------------------
+    def _diverged(self, engine) -> bool:
+        """Did the engine's actuated state silently diverge from the last
+        issued action (stuck/clamped DVFS under fault injection)? The 2-D
+        tuner overrides this to compare phase-target pairs."""
+        return (self.prev_action is not None
+                and engine.frequency != self.prev_action)
+
     def _fault_hold(self, engine, window, t: Optional[float] = None
                     ) -> float:
         """Graceful degradation on a faulted window: re-issue the previous

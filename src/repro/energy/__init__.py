@@ -2,7 +2,8 @@ from repro.energy.power_model import (A6000, A6000_MEASURED, TPU_V5E,
                                       DVFSModel, HardwareSpec)
 from repro.energy.costs import (CostModel, active_param_count,
                                 get_cost_model, iteration_cost, param_count)
+from repro.energy.phases import phase_optimal_frequencies
 
 __all__ = ["A6000", "A6000_MEASURED", "TPU_V5E", "CostModel", "DVFSModel",
            "HardwareSpec", "active_param_count", "get_cost_model",
-           "iteration_cost", "param_count"]
+           "iteration_cost", "param_count", "phase_optimal_frequencies"]

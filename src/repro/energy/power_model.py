@@ -1,6 +1,7 @@
 """Analytical DVFS latency/power model — the physics layer of the simulated
 serving environment (the paper evaluates in "an environment simulating
-realistic, fluctuating inference requests"; this is ours, see DESIGN.md §2).
+realistic, fluctuating inference requests"; this is ours — see
+docs/ARCHITECTURE.md for how it slots under the engine/event core).
 
 Latency: an iteration splits into a compute-bound part that scales ~1/f and
 a memory-bound part that is frequency-insensitive (GDDR/HBM clocks are not
@@ -12,10 +13,15 @@ paper's phenomenology: U-shaped EDP-vs-frequency curves whose minimum sits
 high for compute-bound workloads (prefill-heavy, high-concurrency) and low
 for memory-bound ones (decode-heavy, cache-hit-heavy).
 
-Two calibrations ship: the A6000 set (used for the faithful reproduction so
-learned optima land in the paper's 1200-1410 MHz band) and a TPU-v5e set
-(the deployment target; "frequency" is the virtualized power-state knob,
-DESIGN.md §2).
+The knee constants also give prefill and decode *different* optima
+(compute-bound prefill near the perf knee, bandwidth-bound decode near the
+bw knee) — the separation phase-disaggregated DVFS exploits
+(``repro.energy.phases``, ``set_phase_frequencies``).
+
+Three calibrations ship: the A6000 set (used for the faithful reproduction
+so learned optima land in the paper's 1200-1410 MHz band), A6000_MEASURED
+(the same physics with nonzero DVFS transition billing), and a TPU-v5e set
+(the deployment target; "frequency" is the virtualized power-state knob).
 """
 from __future__ import annotations
 
@@ -108,8 +114,8 @@ A6000_MEASURED = dataclasses.replace(
     dvfs_transition_cost_j=1.25,
 )
 
-# TPU v5e: "frequency" = virtualized power-state multiplier (DESIGN.md §2);
-# grid mirrors the roofline constants given in the assignment.
+# TPU v5e: "frequency" = virtualized power-state multiplier; the grid
+# mirrors the published v5e roofline constants.
 TPU_V5E = HardwareSpec(
     name="TPU-v5e",
     f_min=0.25 * 1_000, f_max=1_000.0, f_step=25.0,   # normalized milli-units
@@ -133,6 +139,13 @@ class DVFSModel:
     (clamped values, custom policies) fall back to computing and memoising
     the same terms on first use. Cached values are produced by the exact
     expressions the scalar path used, so latency/power are bit-identical.
+
+    Three consumers share this table: the scalar per-event path
+    (:meth:`iteration_time_power`), the batched fleet path
+    (:meth:`iteration_time_power_vec` over rows from
+    :meth:`freq_terms_array`), and per-phase pricing
+    (``SimBackend.execute_phased`` calls the scalar method once per phase
+    at that phase's clock) — all billing the same physics.
     """
 
     def __init__(self, spec: HardwareSpec):

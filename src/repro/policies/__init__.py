@@ -16,6 +16,14 @@ Built-in registry entries
                     + refinement + Page-Hinkley convergence)
 ``agft-switchcost`` AGFT with DVFS transitions priced into the reward
                     (switching-aware bandits, arXiv:2410.11855)
+``agft-2d``         phase-disaggregated AGFT: learns a ``(f_prefill,
+                    f_decode)`` pair over a pruned product action space
+                    seeded around the analytic per-phase EDP optima
+                    (GreenLLM, arXiv:2508.16449; see
+                    ``repro.core.tuner2d`` / ``repro.policies.phased``)
+``greenllm-rule``   static per-phase clocks from the same analytic sweep —
+                    the rule comparator for the 2-D surface (event-loop
+                    mode only; batched mode refuses phased policies)
 ``static``          one fixed frequency for the whole run (locked clocks)
 ``oracle``          best *fixed* frequency from an offline EDP sweep
 ``ondemand``        utilization-threshold rule DVFS (Linux ondemand style)
@@ -70,6 +78,7 @@ from repro.policies.fixed import (OracleFixedPolicy, StaticPolicy,
                                   snap_to_grid)
 from repro.policies.rules import OndemandPolicy, SLOAwareLatencyPolicy
 from repro.policies.agft import make_agft, make_agft_switchcost
+from repro.policies.phased import GreenLLMRulePolicy, make_agft_2d
 from repro.policies.fleet import (FleetPolicy, FleetTelemetryView,
                                   GlobalFrequencyPolicy)
 from repro.policies.hierarchy import (BandCoordinator, FleetPowerMeter,
@@ -79,6 +88,7 @@ __all__ = ["PowerPolicy", "WindowedPolicy", "TelemetryRecorder",
            "available_policies", "get_policy", "register_policy",
            "StaticPolicy", "OracleFixedPolicy", "OndemandPolicy",
            "SLOAwareLatencyPolicy", "make_agft", "make_agft_switchcost",
+           "make_agft_2d", "GreenLLMRulePolicy",
            "snap_to_grid", "FleetPolicy", "FleetTelemetryView",
            "GlobalFrequencyPolicy", "BandCoordinator", "FleetPowerMeter",
            "full_busy_power_w", "waterfill"]

@@ -1,12 +1,15 @@
 """Registry entries for the paper's tuner: AGFT *is* a PowerPolicy.
 
 ``AGFTTuner`` already conforms structurally (``maybe_act(engine) ->
-Optional[float]``, telemetry via the shared ``TelemetryMonitor``, and the
-optional band hook ``set_band(f_lo, f_hi)`` — implemented by masking
-LinUCB arms outside the fleet-assigned band, see
-``repro.policies.hierarchy``); this module only adapts its constructor
-signature to the registry's ``(hardware, **kwargs)`` convention, plus the
-switching-cost-aware ablation variant.
+Optional[float]``, the ``tick`` hook for pure POLICY_TICK scheduling,
+telemetry via the shared ``TelemetryMonitor``, and the optional band hook
+``set_band(f_lo, f_hi)`` — implemented by masking LinUCB arms outside the
+fleet-assigned band, see ``repro.policies.hierarchy``); this module only
+adapts its constructor signature to the registry's ``(hardware,
+**kwargs)`` convention, plus two ablation variants: the fault-naive
+learner (``agft-naive``) and the switching-cost-aware reward
+(``agft-switchcost``). The phase-disaggregated 2-D variant (``agft-2d``)
+lives in ``repro.policies.phased`` with its rule comparator.
 """
 from __future__ import annotations
 

@@ -65,6 +65,11 @@ class WindowedPolicy:
     Subclasses implement ``decide(window, engine) -> Optional[float]``;
     the returned frequency is clamped to the hardware envelope — and into
     the fleet-assigned band, when a coordinator has set one — and actuated.
+    A decision may instead be a ``(f_prefill, f_decode)`` pair (the
+    optional 2-D surface, see ``repro.policies.phased``): both axes are
+    clamped the same way and actuated via ``set_phase_frequencies``.
+    Phased policies declare ``phased = True`` so the batched fleet loop
+    can refuse them at construction.
     """
 
     #: label recorded in history rows; subclasses override
@@ -118,12 +123,22 @@ class WindowedPolicy:
             return None
         window = self.monitor.observe(engine, now=now)
         f = self.decide(window, engine)
-        if f is not None:
-            f = float(min(max(f, self.hw.f_min), self.hw.f_max))
-            if self.band is not None:
-                f = float(min(max(f, self.band[0]), self.band[1]))
+        if isinstance(f, tuple):
+            # phase-disaggregated decision (optional 2-D surface): clamp
+            # each axis into the envelope/band and actuate both phase
+            # clocks (see repro.serving.engine.set_phase_frequencies)
+            f = tuple(self._clamp(x) for x in f)
+            engine.set_phase_frequencies(*f)
+        elif f is not None:
+            f = self._clamp(f)
             engine.set_frequency(f)
         self._record(engine, f, window, t=now)
+        return f
+
+    def _clamp(self, f: float) -> float:
+        f = float(min(max(f, self.hw.f_min), self.hw.f_max))
+        if self.band is not None:
+            f = float(min(max(f, self.band[0]), self.band[1]))
         return f
 
     def decide(self, window: Optional[WindowStats],

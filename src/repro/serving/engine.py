@@ -94,6 +94,53 @@ class SimBackend:
         t, p = self.dvfs.iteration_time_power(flops, mem, f_mhz)
         return t, p * t, p
 
+    def execute_phased(self, plan: BatchPlan, f_prefill: float,
+                       f_decode: float
+                       ) -> Tuple[float, float, float, float]:
+        """Per-phase pricing of one iteration: the prefill half at
+        ``f_prefill``, the decode half at ``f_decode``. Returns
+        ``(t_prefill, e_prefill, t_decode, e_decode)``.
+
+        The work split is identical to :meth:`execute` — same two
+        ``iteration_cost`` calls, same shared-weight-read subtraction on
+        the decode half of a mixed iteration — but each half is priced by
+        its own ``iteration_time_power`` call at its phase clock. Each
+        half carries its own ``iteration_overhead_s`` (the mid-iteration
+        clock switch splits the launch into two dispatches), so a mixed
+        iteration at an equal pair is deliberately NOT the same number as
+        the single-clock :meth:`execute` — 1-D engines never route through
+        this method.
+        """
+        cost = self.cost
+        t_pf = e_pf = t_de = e_de = 0.0
+        if plan.prefill:
+            s = 0.0
+            tok = 0
+            for r, n in plan.prefill:
+                s += r.prefilled + n / 2
+                tok += n
+            f1, m1 = cost.iteration_cost(prefill_tokens=tok,
+                                         decode_seqs=0,
+                                         avg_context=s / len(plan.prefill))
+            t, p = self.dvfs.iteration_time_power(f1, m1, f_prefill)
+            t_pf, e_pf = t, p * t
+        if plan.decode:
+            s = 0.0
+            for r in plan.decode:
+                s += r.prefilled + r.generated       # inlined context_len
+            f2, m2 = cost.iteration_cost(prefill_tokens=0,
+                                         decode_seqs=len(plan.decode),
+                                         avg_context=s / len(plan.decode))
+            # weight reads are shared between the halves of a mixed
+            # iteration — the decode half re-reads only what the prefill
+            # half didn't already stream (same rule as ``execute``)
+            if plan.prefill:
+                m2 -= self._shared_weight_bytes
+            t, p = self.dvfs.iteration_time_power(f2, max(m2, 0.0),
+                                                  f_decode)
+            t_de, e_de = t, p * t
+        return t_pf, e_pf, t_de, e_de
+
     def execute_mixed_vec(self, prefill_tokens, prefill_count,
                           prefill_ctx_sum, decode_seqs, decode_ctx_sum,
                           terms):
@@ -222,6 +269,10 @@ class InferenceEngine:
         self.metrics = MetricsExporter()
         self.clock = 0.0
         self.frequency = initial_frequency or hardware.f_max
+        #: phase-disaggregated DVFS targets ``(f_prefill, f_decode)`` set
+        #: by ``set_phase_frequencies``; None (the default) = classic 1-D
+        #: mode, whose iteration path is untouched by phased pricing
+        self.freq_targets: Optional[Tuple[float, float]] = None
         # future arrivals: (arrival_time, submit order, request) heap —
         # O(log n) per submit, FIFO among equal arrival times
         self._pending: List[Tuple[float, int, Request]] = []
@@ -252,6 +303,31 @@ class InferenceEngine:
             self.inflight -= 1
 
     def set_frequency(self, f_mhz: float) -> None:
+        """Actuate one clock for every phase (the paper's non-invasive 1-D
+        boundary). Clears any per-phase targets: a scalar actuation — a
+        1-D policy, a band clamp, an operator override — always wins over
+        a previously issued phase pair."""
+        self.freq_targets = None
+        self._apply_frequency(f_mhz)
+
+    def set_phase_frequencies(self, f_prefill: float,
+                              f_decode: float) -> None:
+        """Phase-disaggregated actuation: run prefill-chunk work at
+        ``f_prefill`` and pure-decode work at ``f_decode`` from the next
+        iteration on (mixed iterations price each half at its own clock;
+        every actual mid-iteration clock change is billed through the
+        same ``dvfs_transition_cost`` machinery as a policy actuation).
+        Targets are clamped to the hardware envelope and persist until
+        ``set_frequency`` reverts the engine to 1-D mode."""
+        sp = self.hardware
+        self.freq_targets = (
+            float(min(max(f_prefill, sp.f_min), sp.f_max)),
+            float(min(max(f_decode, sp.f_min), sp.f_max)))
+
+    def _apply_frequency(self, f_mhz: float) -> None:
+        """The actual clock switch (fault filter -> clamp -> transition
+        billing) — shared by the public 1-D ``set_frequency`` and the
+        per-phase switches ``run_iteration`` performs in phased mode."""
         fs = self.fault_state
         if fs is not None:
             # flaky actuation: the call may silently stick (lost) or lag
@@ -342,6 +418,33 @@ class InferenceEngine:
         self.clock += dt
         return []
 
+    def _execute_phased(self, plan: BatchPlan
+                        ) -> Tuple[float, float, float]:
+        """Phase-disaggregated iteration: switch to ``f_prefill`` for the
+        prefill half and ``f_decode`` for the decode half (each switch
+        runs through ``_apply_frequency``, so fault filtering, clamping
+        and DVFS-transition billing apply exactly as for a policy
+        actuation), then price each half at the clock that actually
+        landed. A mixed iteration ends at the decode clock."""
+        f_pf, f_de = self.freq_targets
+        ex = getattr(self.backend, "execute_phased", None)
+        if ex is None:
+            # backend can't split an iteration (e.g. JaxBackend measures
+            # one wall time): run the whole batch at the dominant phase's
+            # target — decode when any decode work is present
+            self._apply_frequency(f_de if plan.decode else f_pf)
+            return self.backend.execute(plan, self.frequency)
+        if plan.prefill:
+            self._apply_frequency(f_pf)
+            f_pf = self.frequency        # what the switch actually landed
+        if plan.decode:
+            self._apply_frequency(f_de)
+            f_de = self.frequency
+        t_pf, e_pf, t_de, e_de = ex(plan, f_pf, f_de)
+        dt = t_pf + t_de
+        energy = e_pf + e_de
+        return dt, energy, (energy / dt if dt > 0.0 else 0.0)
+
     def run_iteration(self) -> List[Request]:
         """Execute one continuous-batching iteration at the current clock
         (the scheduler is expected to hold work; otherwise this is a
@@ -364,7 +467,10 @@ class InferenceEngine:
             if r.cached_tokens and r.prefilled == r.cached_tokens:
                 cached_tok += r.cached_tokens
 
-        dt, energy, power = self.backend.execute(plan, self.frequency)
+        if self.freq_targets is None:
+            dt, energy, power = self.backend.execute(plan, self.frequency)
+        else:
+            dt, energy, power = self._execute_phased(plan)
         self.clock += dt
         finished = sched.complete_iteration(plan, self.clock)
         if finished:

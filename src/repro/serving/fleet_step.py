@@ -68,9 +68,12 @@ the event loop's heap order up to same-instant ties).
 
 Unsupported shapes raise ``NotImplementedError`` at construction: network
 routing (in-flight deliveries), fleet policy + tick mode, non-Sim
-backends, heterogeneous model/hardware configs, and ``max_num_seqs >
+backends, heterogeneous model/hardware configs, ``max_num_seqs >
 max_batched_tokens`` (the decode-every-iteration invariant the finish
-heaps rely on).
+heaps rely on), an active fault model (crash evacuation and re-routing
+need the event heap), and phase-disaggregated engines or policies
+(``freq_targets`` / ``phased = True`` — per-phase clocks need the
+per-event pricing path; see ``repro.policies.phased``).
 """
 from __future__ import annotations
 
@@ -195,6 +198,17 @@ class BatchedFleetLoop:
                     "step_mode='batched' does not support an active "
                     "fault model (crash evacuation and re-routing need "
                     "the event heap)")
+            if getattr(eng, "freq_targets", None) is not None:
+                raise NotImplementedError(
+                    "step_mode='batched' does not support phase-"
+                    "disaggregated engines (per-phase clocks need the "
+                    "per-event pricing path; use step_mode='events')")
+        for pol in self.policies:
+            if getattr(pol, "phased", False):
+                raise NotImplementedError(
+                    "step_mode='batched' does not support phased "
+                    "policies (agft-2d / greenllm-rule actuate "
+                    "set_phase_frequencies; use step_mode='events')")
         self.fleet_policy = fleet_policy
         self.max_iters = max_iters
         self.policy_tick_mode = policy_tick_mode

@@ -56,6 +56,8 @@ class ContinuousBatchingScheduler:
                  prefill_chunk: int = 512):
         self.kv = kv
         self.max_num_seqs = max_num_seqs
+        #: the configured ceiling ``set_admission_cap`` clamps against
+        self._base_max_seqs = max_num_seqs
         self.max_batched_tokens = max_batched_tokens
         self.prefill_chunk = prefill_chunk
         self.waiting: Deque[Request] = deque()
@@ -75,6 +77,19 @@ class ContinuousBatchingScheduler:
         if req.deadline_s is not None:
             self._has_deadlines = True
         self.waiting.append(req)
+
+    def set_admission_cap(self, cap) -> None:
+        """Optional second control knob (dual-knob policies): clamp
+        concurrent-sequence admission to ``min(cap, configured
+        max_num_seqs)``; ``None`` restores the configured ceiling.
+        Already-running sequences are never evicted — the cap throttles
+        future admission only, so it takes effect as sequences finish.
+        Admission always reads ``max_num_seqs`` live (both the event loop
+        and the batched fleet path drive the real ``_admit``), so a
+        policy may retune the cap every window."""
+        base = self._base_max_seqs
+        self.max_num_seqs = (base if cap is None
+                             else max(1, min(base, int(cap))))
 
     @property
     def has_work(self) -> bool:

@@ -1,0 +1,114 @@
+#!/usr/bin/env python
+"""Docs consistency gate (CI ``docs`` job): ``python tests/check_docs.py``.
+
+Two checks, both over committed Markdown only (no network):
+
+1. **Link check** — every relative ``[text](target)`` link in README.md,
+   ROADMAP.md, and ``docs/*.md`` must resolve to an existing file or
+   directory, and a ``#fragment`` must match a heading (GitHub slug
+   rules) or an explicit ``<a name="...">`` anchor in the target file.
+2. **Module-map completeness** — every package directory under
+   ``src/repro/`` must be named in ``docs/ARCHITECTURE.md``'s module
+   map, so the architecture page can't silently rot as packages land.
+
+Deliberately not named ``test_*``: this is a repo-consistency gate, not
+a tier-1 unit test, and it should not run (or fail) inside ``pytest -x``
+while docs are mid-edit. Exit 0 on success, 1 with a findings list
+otherwise.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+DOC_FILES = [ROOT / "README.md", ROOT / "ROADMAP.md",
+             *sorted((ROOT / "docs").glob("*.md"))]
+ARCHITECTURE = ROOT / "docs" / "ARCHITECTURE.md"
+SRC_PKG_ROOT = ROOT / "src" / "repro"
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+ANCHOR_RE = re.compile(r"<a\s+name=\"([^\"]+)\"")
+FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's heading-to-anchor slug: strip markup, lowercase, drop
+    punctuation, spaces to hyphens."""
+    text = re.sub(r"[`*_]", "", heading.strip())
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", text)  # inline links
+    text = re.sub(r"[^\w\- ]", "", text.lower())
+    return text.replace(" ", "-")
+
+
+def anchors_in(path: Path) -> set:
+    text = path.read_text(encoding="utf-8")
+    slugs = {github_slug(h) for h in HEADING_RE.findall(text)}
+    slugs.update(ANCHOR_RE.findall(text))
+    return slugs
+
+
+def check_links() -> list:
+    problems = []
+    for doc in DOC_FILES:
+        if not doc.exists():
+            problems.append(f"{doc.relative_to(ROOT)}: file missing")
+            continue
+        text = FENCE_RE.sub("", doc.read_text(encoding="utf-8"))
+        for target in LINK_RE.findall(text):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue  # external links are not checked (no network)
+            path_part, _, fragment = target.partition("#")
+            dest = doc if not path_part else (
+                doc.parent / path_part).resolve()
+            rel = f"{doc.relative_to(ROOT)}: link '{target}'"
+            if not dest.exists():
+                problems.append(f"{rel} -> missing path {path_part}")
+                continue
+            if fragment:
+                if dest.is_dir() or dest.suffix.lower() != ".md":
+                    problems.append(
+                        f"{rel} -> fragment on non-markdown target")
+                elif fragment not in anchors_in(dest):
+                    problems.append(
+                        f"{rel} -> no heading/anchor '#{fragment}' "
+                        f"in {dest.relative_to(ROOT)}")
+    return problems
+
+
+def check_module_map() -> list:
+    if not ARCHITECTURE.exists():
+        return ["docs/ARCHITECTURE.md: file missing"]
+    text = ARCHITECTURE.read_text(encoding="utf-8")
+    packages = sorted(p.name for p in SRC_PKG_ROOT.iterdir()
+                      if p.is_dir() and (p / "__init__.py").exists())
+    problems = []
+    for pkg in packages:
+        if f"repro/{pkg}/" not in text:
+            problems.append(
+                f"docs/ARCHITECTURE.md: package src/repro/{pkg}/ missing "
+                f"from the module map")
+    if not packages:
+        problems.append("src/repro/: no packages found (wrong checkout?)")
+    return problems
+
+
+def main() -> int:
+    problems = check_links() + check_module_map()
+    if problems:
+        print(f"check_docs: {len(problems)} problem(s)")
+        for p in problems:
+            print(f"  - {p}")
+        return 1
+    n_links = sum(
+        len(LINK_RE.findall(FENCE_RE.sub("", d.read_text(encoding="utf-8"))))
+        for d in DOC_FILES if d.exists())
+    print(f"check_docs: OK ({len(DOC_FILES)} files, {n_links} links, "
+          f"module map complete)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
