@@ -10,7 +10,7 @@ import numpy as np
 
 from benchmarks.parallel import pmap
 from repro.configs import get_config
-from repro.energy import A6000
+from repro.energy import A6000, HardwareSpec, resolve_hardware
 from repro.policies import PowerPolicy, get_policy
 from repro.serving import EngineConfig, InferenceEngine
 from repro.workloads import (PROTOTYPES, generate_azure_trace,
@@ -50,17 +50,22 @@ def load_json(name: str):
 
 
 def make_engine(frequency: Optional[float] = None,
-                arch: str = PAPER_MODEL) -> InferenceEngine:
+                arch: str = PAPER_MODEL,
+                hardware: Union[HardwareSpec, str] = A6000
+                ) -> InferenceEngine:
+    hw = resolve_hardware(hardware)
     eng = InferenceEngine(get_config(arch), EngineConfig(),
-                          hardware=A6000,
-                          initial_frequency=frequency or A6000.f_max)
+                          hardware=hw,
+                          initial_frequency=frequency or hw.f_max)
     return eng
 
 
-def resolve_policy(policy, policy_kwargs: Optional[Dict] = None):
+def resolve_policy(policy, policy_kwargs: Optional[Dict] = None,
+                   hardware: Union[HardwareSpec, str] = A6000):
     """Registry name -> constructed policy; instances/None pass through."""
     if isinstance(policy, str):
-        return get_policy(policy, hardware=A6000, **(policy_kwargs or {}))
+        return get_policy(policy, hardware=resolve_hardware(hardware),
+                          **(policy_kwargs or {}))
     return policy
 
 
@@ -69,15 +74,17 @@ def run_workload(workload: str, *, n_requests: int = 400,
                  policy: Union[str, PowerPolicy, None] = None,
                  policy_kwargs: Optional[Dict] = None,
                  tuner=None, seed: int = 1,
-                 azure_duration: float = 0.0) -> Dict:
+                 azure_duration: float = 0.0,
+                 hardware: Union[HardwareSpec, str] = A6000) -> Dict:
     """Run one workload trace; ``policy`` is a registry name (e.g.
     "agft"/"static"/"ondemand"), a PowerPolicy instance, or None for fixed
     clocks at ``frequency`` (default f_max). ``tuner=`` is the legacy
-    alias for a ready instance."""
+    alias for a ready instance. ``hardware`` picks the spec (instance or
+    registry name); registry-name policies resolve against the same spec."""
     if policy is None:
         policy = tuner
-    policy = resolve_policy(policy, policy_kwargs)
-    eng = make_engine(frequency)
+    policy = resolve_policy(policy, policy_kwargs, hardware=hardware)
+    eng = make_engine(frequency, hardware=hardware)
     if workload == "azure":
         eng.submit(generate_azure_trace(azure_duration or 1200.0,
                                         base_rate=rate, seed=seed))
@@ -122,9 +129,10 @@ def _sweep_cell(args: tuple) -> Dict:
     """One fixed-frequency trace run — module-level so it pickles into
     ``pmap`` workers; strips the engine before crossing the process
     boundary."""
-    workload, f, n_requests, rate, seed, ttft_weight = args
+    workload, f, n_requests, rate, seed, ttft_weight, hardware = args
     r = strip_engine(run_workload(workload, n_requests=n_requests, rate=rate,
-                                  frequency=float(f), seed=seed))
+                                  frequency=float(f), seed=seed,
+                                  hardware=hardware))
     r["delay_s"] = r["tpot_s"] + ttft_weight * r["ttft_s"]
     r["edp_sweep"] = r["energy_j"] * r["delay_s"]
     return r
@@ -133,44 +141,70 @@ def _sweep_cell(args: tuple) -> Dict:
 def sweep_frequencies(workload: str, freqs: List[float], *,
                       n_requests: int = 150, rate: float = BASE_RATE,
                       seed: int = 1, ttft_weight: float = 0.1,
-                      jobs: Optional[int] = None) -> List[Dict]:
+                      jobs: Optional[int] = None,
+                      hardware: Union[HardwareSpec, str] = A6000
+                      ) -> List[Dict]:
     """EDP(f) curve; delay = tpot + ttft_weight*ttft (paper's latency mix).
 
     Cells are independent fully-seeded runs, fanned out over a process pool
     and merged back in frequency order (deterministic regardless of
     completion order)."""
+    hw = resolve_hardware(hardware)
     return pmap(_sweep_cell,
-                [(workload, float(f), n_requests, rate, seed, ttft_weight)
-                 for f in freqs], jobs=jobs, seed=seed)
+                [(workload, float(f), n_requests, rate, seed, ttft_weight,
+                  hw) for f in freqs], jobs=jobs, seed=seed)
 
 
 ORACLE_SWEEPS = "oracle_sweeps.json"
 
 
+def _oracle_key(workload: str, n_requests: int, rate: float, seed: int,
+                hw: HardwareSpec) -> str:
+    return f"{workload}|n{n_requests}|r{rate}|s{seed}|{hw.name}"
+
+
+def _migrate_oracle_cache(cache: Dict[str, float]) -> Dict[str, float]:
+    """Rewrite legacy ``workload|n|rate|seed`` keys to the hardware-keyed
+    form. Every pre-migration sweep ran on the A6000 calibration (the old
+    code hardcoded it), so legacy entries are A6000 results by
+    construction; without the spec name in the key, any non-A6000 caller
+    would silently read A6000 optima back out."""
+    out: Dict[str, float] = {}
+    for k, v in cache.items():
+        if k.count("|") == 3:
+            k = f"{k}|{A6000.name}"
+        out[k] = v
+    return out
+
+
 def measured_oracle_frequency(workload: str, *, n_requests: int = 150,
                               rate: float = BASE_RATE, seed: int = 1,
-                              refresh: bool = False) -> float:
+                              refresh: bool = False,
+                              hardware: Union[HardwareSpec, str] = A6000
+                              ) -> float:
     """Trace-measured best fixed frequency for ``workload``: the two-stage
     offline sweep's optimum, cached in ``results/oracle_sweeps.json`` so
-    every benchmark table shares one sweep per (workload, trace) point.
-    Feed it to the registry — ``get_policy("oracle", frequency_mhz=...)``
-    — to get the paper's "theoretical optimum" row measured on the trace
-    rather than derived from the analytic cost model."""
-    key = f"{workload}|n{n_requests}|r{rate}|s{seed}"
+    every benchmark table shares one sweep per (workload, trace, hardware)
+    point. Feed it to the registry — ``get_policy("oracle",
+    frequency_mhz=...)`` — to get the paper's "theoretical optimum" row
+    measured on the trace rather than derived from the analytic cost
+    model."""
+    hw = resolve_hardware(hardware)
+    key = _oracle_key(workload, n_requests, rate, seed, hw)
     cache: Dict[str, float] = {}
     try:
-        cache = load_json(ORACLE_SWEEPS)
+        cache = _migrate_oracle_cache(load_json(ORACLE_SWEEPS))
     except (FileNotFoundError, ValueError):
         pass
     if not refresh and key in cache:
         return float(cache[key])
     best, _ = two_stage_optimal(workload, n_requests=n_requests, rate=rate,
-                                seed=seed)
+                                seed=seed, hardware=hw)
     # re-merge before saving: a concurrently-running benchmark cell may have
     # added other keys since we loaded (values are deterministic per key, so
     # last-writer-wins is safe; the merge just avoids dropping them)
     try:
-        cache = {**load_json(ORACLE_SWEEPS), **cache}
+        cache = {**_migrate_oracle_cache(load_json(ORACLE_SWEEPS)), **cache}
     except (FileNotFoundError, ValueError):
         pass
     cache[key] = float(best["frequency"])
@@ -181,23 +215,25 @@ def measured_oracle_frequency(workload: str, *, n_requests: int = 150,
 def two_stage_optimal(workload: str, *, coarse_step: float = 90.0,
                       fine_step: float = 15.0, fine_half: float = 90.0,
                       n_requests: int = 150, rate: float = BASE_RATE,
-                      seed: int = 1, jobs: Optional[int] = None):
+                      seed: int = 1, jobs: Optional[int] = None,
+                      hardware: Union[HardwareSpec, str] = A6000):
     """Coarse sweep over the full range, then 15 MHz resolution around the
     coarse optimum — the paper's offline 'theoretical optimum' procedure at
     tractable cost. Each stage fans its frequency cells out over the
     process pool (the fine stage depends on the coarse argmin, so the two
-    stages themselves stay sequential)."""
-    hw = A6000
+    stages themselves stay sequential). The sweep range, grid step, and
+    engine all come from ``hardware`` (A6000 default)."""
+    hw = resolve_hardware(hardware)
     coarse = list(np.arange(hw.f_min, hw.f_max + 1, coarse_step))
     rows = sweep_frequencies(workload, coarse, n_requests=n_requests,
-                             rate=rate, seed=seed, jobs=jobs)
+                             rate=rate, seed=seed, jobs=jobs, hardware=hw)
     best = min(rows, key=lambda r: r["edp_sweep"])
     lo = max(hw.f_min, best["frequency"] - fine_half)
     hi = min(hw.f_max, best["frequency"] + fine_half)
     fine = [f for f in np.arange(lo, hi + 1, fine_step)
             if abs(f - best["frequency"]) > 1e-9]
     rows += sweep_frequencies(workload, fine, n_requests=n_requests,
-                              rate=rate, seed=seed, jobs=jobs)
+                              rate=rate, seed=seed, jobs=jobs, hardware=hw)
     rows.sort(key=lambda r: r["frequency"])
     best = min(rows, key=lambda r: r["edp_sweep"])
     return best, rows

@@ -240,6 +240,27 @@ def _phases2d_reduce(results, quick):
                  f"{s.get('agft2d_vs_rule_edp_pct', 0):+.1f}%"), out
 
 
+def _hetero_units(quick, deps):
+    from benchmarks import tab_hetero
+    return [(tab_hetero._cell, (a,))
+            for a in tab_hetero.unit_args(
+                tab_hetero.QUICK_REQUESTS if quick
+                else tab_hetero.FULL_REQUESTS)]
+
+
+def _hetero_reduce(results, quick):
+    from benchmarks import tab_hetero
+    out = tab_hetero._assemble(results, quiet=True)
+    s = out["summary"]
+    wins = s["wins"]
+    derived = f"energy_wins:{len(wins)}/{len(tab_hetero.MIXED)}"
+    first = next((c for c in tab_hetero.MIXED if c in s), None)
+    if first is not None:
+        derived += (f";{first}_edp_vs_ll"
+                    f"{s[first]['edp_vs_least-loaded_pct']:+.1f}%")
+    return 0.0, derived, out
+
+
 def _powercap_units(quick, deps):
     from benchmarks import tab_powercap
     return [(tab_powercap._cell, (a,))
@@ -281,6 +302,8 @@ GRID = [
                                "reduce": _faults_reduce}),
     ("tab_phases_2d", {"units": _phases2d_units,
                        "reduce": _phases2d_reduce}),
+    ("tab_hetero_routing", {"units": _hetero_units,
+                            "reduce": _hetero_reduce}),
     ("tab_megafleet_batched", _mono(_megafleet)),
     ("roofline_terms", _mono(_roofline)),
 ]

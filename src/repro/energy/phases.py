@@ -12,11 +12,20 @@ that (a) the ``greenllm-rule`` comparator pins for a whole run and (b) the
 """
 from __future__ import annotations
 
+from functools import lru_cache
 from typing import Optional, Sequence, Tuple
 
 from repro.energy.costs import iteration_cost
 from repro.energy.power_model import DVFSModel, HardwareSpec
 from repro.models.common import ModelConfig
+
+
+@lru_cache(maxsize=32)
+def _dvfs_for(hw: HardwareSpec) -> DVFSModel:
+    """One tabulated DVFSModel per spec — mixed fleets resolve per-phase
+    optima for the same tier many times (one policy per node); rebuilding
+    the full frequency-terms table each call is pure waste."""
+    return DVFSModel(hw)
 
 
 def _edp_argmin(dvfs: DVFSModel, flops: float, mem: float,
@@ -48,8 +57,16 @@ def phase_optimal_frequencies(
     points on BOTH axes (falling back to the full grid when the band holds
     no grid point), so hierarchy/thermal clamps compose the same way they
     do for the 1-D oracle sweep.
+
+    The optima are per-spec by construction (the sweep runs over ``hw``'s
+    own grid with ``hw``'s own knees); the cached result path below makes
+    repeat lookups on mixed fleets O(1) per node.
     """
-    dvfs = dvfs or DVFSModel(hw)
+    if dvfs is None:
+        if band is None:
+            return _phase_optima_cached(hw, model_cfg, prefill_chunk,
+                                        decode_seqs, avg_context)
+        dvfs = _dvfs_for(hw)
     grid = hw.frequencies()
     if band is not None:
         in_band = [f for f in grid
@@ -63,3 +80,12 @@ def phase_optimal_frequencies(
                             avg_context=avg_context)
     return (_edp_argmin(dvfs, fp, mp, grid),
             _edp_argmin(dvfs, fd, md, grid))
+
+
+@lru_cache(maxsize=256)
+def _phase_optima_cached(hw: HardwareSpec, model_cfg: ModelConfig,
+                         prefill_chunk: int, decode_seqs: int,
+                         avg_context: float) -> Tuple[float, float]:
+    return phase_optimal_frequencies(
+        hw, model_cfg, dvfs=_dvfs_for(hw), prefill_chunk=prefill_chunk,
+        decode_seqs=decode_seqs, avg_context=avg_context)

@@ -19,6 +19,11 @@ cluster — under a workload with any registered power policy (or none).
   # iteration boundaries
   python -m repro.launch.serve --nodes 2 --policy agft \
       --network-model wan --policy-tick-mode tick
+  # mixed-hardware fleet with energy-aware placement: requests land on
+  # the node whose marginal joules-per-token is lowest among nodes that
+  # can still meet the request's TTFT tier
+  python -m repro.launch.serve --nodes 4 --hardware a6000,h100:2,l4 \
+      --router energy --policy agft
 """
 from __future__ import annotations
 
@@ -28,22 +33,19 @@ import json
 import numpy as np
 
 from repro.configs import get_config
-from repro.energy import A6000, A6000_MEASURED, TPU_V5E
+from repro.energy import HARDWARE, parse_fleet_hardware, resolve_hardware
 from repro.policies import available_policies, get_policy
 from repro.serving import (FAULT_PRESETS, NETWORK_PRESETS,
                            POLICY_TICK_MODES, EngineConfig,
                            InferenceEngine, NetworkModel)
-from repro.serving.cluster import ServingCluster
+from repro.serving.cluster import ROUTERS, ServingCluster
 from repro.workloads import (PROTOTYPES, generate_azure_trace,
                              generate_requests)
-
-HARDWARE = {"a6000": A6000, "a6000-measured": A6000_MEASURED,
-            "tpu-v5e": TPU_V5E}
 
 
 def build_engine(arch: str, hardware_name: str = "a6000",
                  engine_cfg: EngineConfig = None) -> InferenceEngine:
-    hw = HARDWARE[hardware_name]
+    hw = resolve_hardware(hardware_name)
     return InferenceEngine(get_config(arch), engine_cfg or EngineConfig(),
                            hardware=hw, initial_frequency=hw.f_max)
 
@@ -96,45 +98,47 @@ def _generate(args):
                              base_rate=args.rate, seed=args.seed)
 
 
-def _node_policies(args, hw):
+def _node_policies(args, hw_list):
     if args.policy == "none":
         return [None] * args.nodes
     kw = ({"frequency_mhz": args.frequency}
           if args.policy in ("static", "oracle") and args.frequency
           else {})
     return [get_policy(args.policy, hardware=hw, **kw)
-            for _ in range(args.nodes)]
+            for hw in hw_list]
 
 
 def _serve_cluster(args) -> dict:
-    """N-node fleet: per-node copies of --policy, one --fleet-policy
-    controller for the whole cluster, or BOTH for hierarchical control
-    (a band coordinator on FLEET_TICK + node-local loops inside the
-    bands)."""
-    hw = HARDWARE[args.hardware]
+    """N-node fleet: per-node copies of --policy (each resolved against
+    its node's hardware spec), one --fleet-policy controller for the
+    whole cluster, or BOTH for hierarchical control (a band coordinator
+    on FLEET_TICK + node-local loops inside the bands)."""
+    hw_list = parse_fleet_hardware(args.hardware, args.nodes)
+    hetero = any(hw != hw_list[0] for hw in hw_list)
+    fleet_hw = hw_list if hetero else hw_list[0]
     fleet = None
     if args.fleet_policy != "none":
         try:
-            fleet = get_policy(args.fleet_policy, hardware=hw,
+            fleet = get_policy(args.fleet_policy, hardware=fleet_hw,
                                **({"power_cap_w": args.power_cap_w}
                                   if args.power_cap_w else {}))
         except TypeError:
             # controller without a cap parameter (e.g. "global"): attach
             # the cap as a metering-only attribute — the event loop still
             # accounts violations against it
-            fleet = get_policy(args.fleet_policy, hardware=hw)
+            fleet = get_policy(args.fleet_policy, hardware=fleet_hw)
             fleet.power_cap_w = args.power_cap_w
     if fleet is None:
-        policies = _node_policies(args, hw)
+        policies = _node_policies(args, hw_list)
     elif getattr(fleet, "coordinates_bands", False):
         # hierarchical: node loops fine-tune inside the coordinator's
         # bands (default to the paper's per-node AGFT)
         if args.policy == "none":
             args.policy = "agft"
-        policies = _node_policies(args, hw)
+        policies = _node_policies(args, hw_list)
     elif getattr(fleet, "observe_only", False):
         # metering-only fleet policy: per-node --policy stays in charge
-        policies = _node_policies(args, hw)
+        policies = _node_policies(args, hw_list)
     else:
         policies = None     # single-frequency controllers actuate alone
     network = None
@@ -142,7 +146,8 @@ def _serve_cluster(args) -> dict:
         network = NetworkModel.from_spec(args.network_model,
                                          seed=args.network_seed)
     cl = ServingCluster(get_config(args.arch), n_nodes=args.nodes,
-                        hardware=hw, policies=policies, fleet_policy=fleet,
+                        hardware=hw_list, policies=policies,
+                        fleet_policy=fleet, router=args.router,
                         network=network,
                         faults=(args.faults if args.faults != "none"
                                 else None),
@@ -156,6 +161,8 @@ def _serve_cluster(args) -> dict:
     s = cl.summary()
     out = {
         "nodes": args.nodes,
+        "hardware": s.node_hardware,
+        "router": args.router,
         "network_model": args.network_model,
         "policy_tick_mode": args.policy_tick_mode,
         "fleet_policy": args.fleet_policy,
@@ -171,6 +178,9 @@ def _serve_cluster(args) -> dict:
         "node_energy_j": s.node_energy_j,
         "engine_steps": steps,
     }
+    if s.energy_by_tier and len(s.energy_by_tier) > 1:
+        out["energy_by_tier"] = s.energy_by_tier
+        out["finished_by_tier"] = s.finished_by_tier
     if s.power_cap_w is not None:
         out["power_cap_w"] = s.power_cap_w
         out["cap_violation_s"] = s.cap_violation_s
@@ -194,7 +204,17 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3-3b")
     ap.add_argument("--hardware", default="a6000",
-                    choices=list(HARDWARE))
+                    help="hardware spec name "
+                         f"({', '.join(sorted(HARDWARE))}) or, with "
+                         "--nodes N, a mixed-fleet spec string like "
+                         "'a6000,h100:2,l4' (name[:count] entries; counts "
+                         "must sum to N; one bare name broadcasts)")
+    ap.add_argument("--router", default="least-loaded",
+                    choices=sorted(ROUTERS),
+                    help="cluster request placement: 'least-loaded' "
+                         "(throughput-normalized queue depth), 'energy' "
+                         "(lowest marginal joules-per-token meeting the "
+                         "request's TTFT tier), 'round-robin', 'length'")
     ap.add_argument("--workload", default="normal",
                     choices=list(PROTOTYPES) + ["azure"])
     ap.add_argument("--requests", type=int, default=2000)
@@ -259,7 +279,8 @@ def main():
                   if args.policy in ("static", "oracle") and args.frequency
                   else {})
             tuner = get_policy(args.policy,
-                               hardware=HARDWARE[args.hardware], **kw)
+                               hardware=resolve_hardware(args.hardware),
+                               **kw)
         elif args.frequency:
             eng.set_frequency(args.frequency)
         eng.drain(policy=tuner)

@@ -104,6 +104,11 @@ class GlobalFrequencyPolicy:
 
     def __init__(self, hardware: HardwareSpec, inner="agft",
                  sampling_period_s: float = 0.8, **inner_kwargs):
+        # fleet-policy registry convention: ``hardware`` may be a per-node
+        # spec list on mixed fleets; a single global frequency is governed
+        # against the primary (first) spec
+        if not isinstance(hardware, HardwareSpec):
+            hardware = list(hardware)[0]
         if isinstance(inner, str):
             inner = get_policy(inner, hardware=hardware,
                                sampling_period_s=sampling_period_s,

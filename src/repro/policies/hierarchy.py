@@ -53,7 +53,7 @@ Usage::
 """
 from __future__ import annotations
 
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -61,6 +61,16 @@ from repro.energy.power_model import HardwareSpec
 from repro.policies.registry import register_policy
 
 Band = Tuple[float, float]
+HardwareArg = Union[HardwareSpec, Sequence[HardwareSpec]]
+
+
+def _primary_spec(hardware: HardwareArg) -> HardwareSpec:
+    """First spec of a per-node list, or the spec itself — the fleet-policy
+    registry convention: ``hardware`` may carry per-node specs for mixed
+    fleets, and policies that govern one value per fleet use the first."""
+    if isinstance(hardware, HardwareSpec):
+        return hardware
+    return list(hardware)[0]
 
 
 def full_busy_power_w(spec: HardwareSpec, f_mhz: float) -> float:
@@ -148,13 +158,27 @@ class BandCoordinator:
     scope = "fleet"
     coordinates_bands = True
 
-    def __init__(self, hardware: HardwareSpec,
+    def __init__(self, hardware: HardwareArg,
                  power_cap_w: Optional[float] = None,
                  sampling_period_s: float = 0.8,
                  band_width_mhz: Optional[float] = None,
                  ramp_headroom: float = 2.0,
                  uniform: bool = False):
-        self.hw = hardware
+        # ``hardware`` may be one spec (homogeneous fleet, the historical
+        # form) or a per-node spec list for mixed fleets. The primary spec
+        # keeps the legacy attributes; per-spec inversion tables are built
+        # lazily. ``act``/``initial_bands`` refresh the node->spec mapping
+        # from the engines they are handed, so the constructor list is
+        # only the pre-telemetry default.
+        if isinstance(hardware, HardwareSpec):
+            specs = [hardware]
+        else:
+            specs = list(hardware)
+            if not specs:
+                raise ValueError("empty per-node hardware list")
+        self.hw = specs[0]
+        self._node_specs: Optional[List[HardwareSpec]] = (
+            specs if any(sp != self.hw for sp in specs) else None)
         self.power_cap_w = power_cap_w
         self.sampling_period_s = sampling_period_s
         self.band_width_mhz = (float(band_width_mhz)
@@ -162,75 +186,145 @@ class BandCoordinator:
         self.ramp_headroom = float(ramp_headroom)
         self.uniform = uniform
         # budget -> frequency inversion table (power is monotone in f)
-        self._grid = hardware.frequencies()
-        self._grid_power = np.array([full_busy_power_w(hardware, f)
+        self._grid = self.hw.frequencies()
+        self._grid_power = np.array([full_busy_power_w(self.hw, f)
                                      for f in self._grid])
         self._p_fmin = float(self._grid_power[0])
         self._p_fmax = float(self._grid_power[-1])
+        #: spec -> (grid, grid_power, p_fmin, p_fmax) for non-primary specs
+        self._tables: dict = {}
         self.bands: Optional[List[Band]] = None
         self.history: List[dict] = []
         self._prev_energy: Optional[List[float]] = None
         self._prev_t: float = 0.0
 
     # ------------------------------------------------------------------
-    def _f_for_budget(self, budget_w: float) -> float:
+    def _table(self, spec: HardwareSpec):
+        """Per-spec budget->frequency inversion table (mixed fleets)."""
+        if spec == self.hw:
+            return self._grid, self._grid_power, self._p_fmin, self._p_fmax
+        tab = self._tables.get(spec)
+        if tab is None:
+            grid = spec.frequencies()
+            gp = np.array([full_busy_power_w(spec, f) for f in grid])
+            tab = (grid, gp, float(gp[0]), float(gp[-1]))
+            self._tables[spec] = tab
+        return tab
+
+    def _f_for_budget(self, budget_w: float,
+                      spec: Optional[HardwareSpec] = None) -> float:
         """Highest grid frequency whose full-busy draw fits the budget
         (f_min when even the floor doesn't fit — can't clock lower)."""
-        i = int(np.searchsorted(self._grid_power, budget_w + 1e-9,
-                                side="right")) - 1
-        return self._grid[max(i, 0)]
+        if spec is None:
+            grid, gp = self._grid, self._grid_power
+        else:
+            grid, gp, _, _ = self._table(spec)
+        i = int(np.searchsorted(gp, budget_w + 1e-9, side="right")) - 1
+        return grid[max(i, 0)]
 
     def _compute_bands(self, weights: List[float],
                        draws: List[Optional[float]],
-                       down: Optional[List[bool]] = None
+                       down: Optional[List[bool]] = None,
+                       specs: Optional[List[HardwareSpec]] = None
                        ) -> List[Optional[Band]]:
         """``down`` (fault injection, ``repro.serving.faults``) excludes
         dead nodes from the water-fill: their weight, demand, and idle
         floor are zero, so the whole budget re-spreads over survivors
         within this tick, and their band is None (nothing to govern).
         With ``down=None`` (or no node down) the arithmetic is exactly
-        the historical healthy-fleet path."""
+        the historical healthy-fleet path.
+
+        ``specs`` (or the stored node->spec mapping) switches the mixed-
+        fleet path on: per-node idle floors, per-spec demand envelopes,
+        and per-spec budget->frequency inversion. A homogeneous fleet
+        takes the historical single-table arithmetic unchanged (the
+        ``n_up * floor`` budget expression is kept verbatim — summing n
+        identical floors would round differently)."""
         n = len(weights)
         cap = float(self.power_cap_w)
         if down is not None and not any(down):
             down = None
+        specs = specs if specs is not None else self._node_specs
+        hetero = (specs is not None
+                  and any(sp != self.hw for sp in specs))
         if self.uniform:
             n_up = n if down is None else n - sum(down)
+            if hetero:
+                # fair capped comparator on a mixed fleet: the same
+                # per-node power budget, inverted through each node's own
+                # full-busy curve
+                fs = [self._f_for_budget(cap / max(n_up, 1), sp)
+                      for sp in specs]
+                if down is None:
+                    return [(f, f) for f in fs]
+                return [None if d else (f, f)
+                        for f, d in zip(fs, down)]
             f = self._f_for_budget(cap / max(n_up, 1))
             if down is None:
                 return [(f, f)] * n
             return [None if d else (f, f) for d in down]
         n_up = n if down is None else n - sum(down)
-        floor = min(self.hw.p_idle, cap / max(n_up, 1))
+        if hetero:
+            floors = []
+            for i in range(n):
+                if down is not None and down[i]:
+                    floors.append(0.0)
+                else:
+                    floors.append(min(specs[i].p_idle,
+                                      cap / max(n_up, 1)))
+        else:
+            floor = min(self.hw.p_idle, cap / max(n_up, 1))
+            floors = None
         demands = []
         for i, d in enumerate(draws):
             if down is not None and down[i]:
                 demands.append(0.0)
                 continue
-            demand = self._p_fmax
+            if hetero:
+                _, _, p_fmin_i, p_fmax_i = self._table(specs[i])
+                floor_i = floors[i]
+            else:
+                p_fmin_i, p_fmax_i, floor_i = \
+                    self._p_fmin, self._p_fmax, floor
+            demand = p_fmax_i
             if d is not None:
                 demand = min(demand,
-                             max(d * self.ramp_headroom, self._p_fmin))
-            demands.append(max(demand - floor, 0.0))
+                             max(d * self.ramp_headroom, p_fmin_i))
+            demands.append(max(demand - floor_i, 0.0))
         if down is not None:
             weights = [0.0 if dn else w for w, dn in zip(weights, down)]
             if all(w <= 0 for w in weights):
                 weights = [0.0 if dn else 1.0 for dn in down]
         elif all(w <= 0 for w in weights):
             weights = [1.0] * n
-        extra = waterfill(cap - n_up * floor, weights, demands)
+        budget = (cap - sum(floors) if hetero
+                  else cap - n_up * floor)
+        extra = waterfill(budget, weights, demands)
         bands: List[Optional[Band]] = []
         for i, a in enumerate(extra):
             if down is not None and down[i]:
                 bands.append(None)
                 continue
-            hi = self._f_for_budget(floor + a)
-            lo = (self.hw.f_min if self.band_width_mhz is None
-                  else max(self.hw.f_min, hi - self.band_width_mhz))
+            if hetero:
+                sp_i = specs[i]
+                hi = self._f_for_budget(floors[i] + a, sp_i)
+            else:
+                sp_i = self.hw
+                hi = self._f_for_budget(floor + a)
+            lo = (sp_i.f_min if self.band_width_mhz is None
+                  else max(sp_i.f_min, hi - self.band_width_mhz))
             bands.append((lo, hi))
         return bands
 
     # ------------------------------------------------------------------
+    def _engine_specs(self, engines) -> Optional[List[HardwareSpec]]:
+        """Refresh the node->spec mapping from live engines (authoritative
+        over the constructor default — per-node placement is the loop's)."""
+        specs = [getattr(e, "hardware", self.hw) for e in engines]
+        self._node_specs = (specs if any(sp != self.hw for sp in specs)
+                            else None)
+        return self._node_specs
+
     def initial_bands(self, engines) -> Optional[List[Band]]:
         """Telemetry-free bands for t=0 (uniform weights, unconstrained
         demands) so the fleet is capped from the first event, not from
@@ -238,7 +332,8 @@ class BandCoordinator:
         if self.power_cap_w is None or not len(engines):
             return None
         n = len(engines)
-        return self._compute_bands([1.0] * n, [None] * n)
+        return self._compute_bands([1.0] * n, [None] * n,
+                                   specs=self._engine_specs(engines))
 
     def act(self, engines, now: float) -> Optional[float]:
         """FLEET_TICK: refresh ``self.bands`` (the event loop propagates
@@ -265,7 +360,9 @@ class BandCoordinator:
                 and e.fault_state.down for e in engines]
         if any(down):
             draws = [None if dn else d for d, dn in zip(draws, down)]
-        self.bands = self._compute_bands(weights, draws, down=down)
+        self.bands = self._compute_bands(
+            weights, draws, down=down,
+            specs=self._engine_specs(engines))
         self.history.append({
             "t": now,
             "bands": list(self.bands),
@@ -285,7 +382,7 @@ class BandCoordinator:
 
 
 @register_policy("hierarchy-uniform")
-def make_uniform_coordinator(hardware: HardwareSpec,
+def make_uniform_coordinator(hardware: HardwareArg,
                              **kwargs) -> BandCoordinator:
     """The capped single-frequency comparator: ``get_policy(
     "hierarchy-uniform", power_cap_w=...)`` == ``get_policy("hierarchy",
@@ -312,10 +409,10 @@ class FleetPowerMeter:
     #: never actuates — per-node policies stay in charge of their engines
     observe_only = True
 
-    def __init__(self, hardware: HardwareSpec,
+    def __init__(self, hardware: HardwareArg,
                  power_cap_w: Optional[float] = None,
                  sampling_period_s: float = 0.8):
-        self.hw = hardware
+        self.hw = _primary_spec(hardware)
         self.power_cap_w = power_cap_w
         self.sampling_period_s = sampling_period_s
 

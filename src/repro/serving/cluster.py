@@ -49,7 +49,7 @@ from typing import Callable, List, Optional, Sequence, Union
 import numpy as np
 
 from repro.core import AGFTConfig
-from repro.energy import A6000, HardwareSpec
+from repro.energy import A6000, HardwareSpec, parse_fleet_hardware
 from repro.models.common import ModelConfig
 from repro.policies import get_policy
 from repro.serving.driver import POLICY_TICK_MODES, EngineNode, EventLoop
@@ -63,10 +63,122 @@ PolicySpec = Union[str, None, object]   # registry name | None | instance
 
 def route_least_loaded(engines: List[InferenceEngine],
                        req: Request) -> int:
-    """Default router: fewest running+waiting requests."""
-    loads = [e.sched.num_running() + e.sched.num_waiting() + e.num_pending
+    """Default router: fewest running+waiting requests, normalized by the
+    node's peak-throughput scale so the comparison survives mixed fleets
+    (an L4 at 3 requests is busier than an H100 at 5 — raw counts are the
+    wrong signal across tiers). On a homogeneous fleet every count divides
+    by the same positive constant, which preserves the argmin (and its
+    ties) exactly — the historical placement is unchanged."""
+    loads = [(e.sched.num_running() + e.sched.num_waiting()
+              + e.num_pending) / e.hardware.peak_throughput()
              for e in engines]
     return int(np.argmin(loads))
+
+
+class RoundRobinRouter:
+    """Cyclic placement in submit order — the hardware- and load-blind
+    baseline the energy-aware router is measured against
+    (``benchmarks/tab_hetero.py``). Stateful: construct one per cluster."""
+
+    def __init__(self):
+        self._next = 0
+
+    def __call__(self, engines: List[InferenceEngine],
+                 req: Request) -> int:
+        i = self._next % len(engines)
+        self._next = i + 1
+        return i
+
+
+class EnergyAwareRouter:
+    """Marginal joules-per-token placement subject to the SLO tier.
+
+    For each candidate node, estimated from the node's own per-spec
+    ``CostModel``/``DVFSModel`` at its *current* clock and queue depth:
+
+    * ``est_ttft`` — queueing + prefill delay: the prompt's prefill time
+      at the node's current clock, once for each request already queued
+      ahead (waiting + pending) plus once for this request;
+    * ``jpt`` — marginal joules per generated token: the increase in
+      decode-iteration energy from growing the node's decode batch by one
+      sequence (joining a busy efficient node rides its amortized weight
+      reads; opening an idle node pays them in full), plus the prompt's
+      prefill energy amortized over an assumed ``decode_tokens`` output.
+
+    Placement: among nodes whose ``est_ttft`` fits the request's SLO tier
+    (``req.deadline_s`` when the workload carries deadlines, else
+    ``default_ttft_slo_s``), take the lowest ``jpt``; when no node fits
+    the tier, take the lowest ``est_ttft`` (degrade toward least-loaded
+    rather than blow the tier everywhere). Both scans break ties to the
+    lowest node index, so placement is deterministic under equal costs.
+    """
+
+    def __init__(self, default_ttft_slo_s: float = 2.0,
+                 decode_tokens: int = 128,
+                 avg_context: float = 1024.0):
+        self.default_ttft_slo_s = float(default_ttft_slo_s)
+        self.decode_tokens = int(decode_tokens)
+        self.avg_context = float(avg_context)
+
+    def __call__(self, engines: List[InferenceEngine],
+                 req: Request) -> int:
+        slo = (req.deadline_s if req.deadline_s is not None
+               else self.default_ttft_slo_s)
+        d_tok = self.decode_tokens
+        best_i, best_jpt = -1, float("inf")
+        fb_i, fb_wait = 0, float("inf")
+        for i, e in enumerate(engines):
+            dvfs = e.backend.dvfs
+            cost = e.backend.cost
+            f = e.frequency
+            q_ahead = (e.sched.num_waiting() + e.num_pending)
+            d0 = e.sched.num_running()
+            fp, mp = cost.iteration_cost(
+                prefill_tokens=req.prompt_len, decode_seqs=0,
+                avg_context=req.prompt_len / 2)
+            t_pf, p_pf = dvfs.iteration_time_power(fp, mp, f)
+            est_ttft = (q_ahead + 1) * t_pf
+            fd1, md1 = cost.iteration_cost(
+                prefill_tokens=0, decode_seqs=d0 + 1,
+                avg_context=self.avg_context)
+            t1, p1 = dvfs.iteration_time_power(fd1, md1, f)
+            if d0 > 0:
+                fd0, md0 = cost.iteration_cost(
+                    prefill_tokens=0, decode_seqs=d0,
+                    avg_context=self.avg_context)
+                t0, p0 = dvfs.iteration_time_power(fd0, md0, f)
+                de = p1 * t1 - p0 * t0
+                if de <= 0.0:
+                    # marginal degenerates (equal-cost plateau): fall back
+                    # to the node's average joules per decoded token
+                    de = p1 * t1 / (d0 + 1)
+            else:
+                de = p1 * t1
+            jpt = (p_pf * t_pf + d_tok * de) / d_tok
+            if est_ttft <= slo and jpt < best_jpt:
+                best_i, best_jpt = i, jpt
+            if est_ttft < fb_wait:
+                fb_i, fb_wait = i, est_ttft
+        return best_i if best_i >= 0 else fb_i
+
+
+#: Router factory registry: names accepted by ``ServingCluster(router=)``
+#: and ``launch.serve --router``. Factories, not instances — stateful
+#: routers must not leak placement state across clusters.
+ROUTERS = {
+    "least-loaded": lambda: route_least_loaded,
+    "length": lambda: route_by_length,
+    "round-robin": RoundRobinRouter,
+    "energy": EnergyAwareRouter,
+}
+
+
+def make_router(name: str) -> Callable:
+    key = str(name).strip().lower()
+    if key not in ROUTERS:
+        raise ValueError(f"unknown router {name!r}; registry has "
+                         f"{sorted(ROUTERS)}")
+    return ROUTERS[key]()
 
 
 def route_by_length(engines: List[InferenceEngine], req: Request) -> int:
@@ -93,6 +205,13 @@ class ClusterSummary:
     edp: float
     node_frequencies: List[float]
     node_energy_j: List[float]
+    # hardware-tier accounting (mixed fleets; single-tier fleets get one
+    # entry). ``energy_by_tier`` maps spec name -> joules, and
+    # ``finished_by_tier`` counts completions per tier so joules/request
+    # per tier falls out directly.
+    node_hardware: Optional[List[str]] = None
+    energy_by_tier: Optional[dict] = None
+    finished_by_tier: Optional[dict] = None
     # power-budget accounting (None unless the attached fleet policy
     # declares power_cap_w — see repro.policies.hierarchy)
     power_cap_w: Optional[float] = None
@@ -113,12 +232,13 @@ class ClusterSummary:
 
 class ServingCluster:
     def __init__(self, model_cfg: ModelConfig, n_nodes: int = 2, *,
-                 hardware: HardwareSpec = A6000,
+                 hardware: Union[HardwareSpec, str,
+                                 Sequence[HardwareSpec]] = A6000,
                  engine_cfg: Optional[EngineConfig] = None,
                  tuner_cfg: Optional[AGFTConfig] = None,
                  with_tuners: bool = True,
                  policies: Optional[Sequence[PolicySpec]] = None,
-                 router: Callable = route_least_loaded,
+                 router: Union[Callable, str] = route_least_loaded,
                  fleet_policy: PolicySpec = None,
                  network: Union[NetworkModel, str, None] = None,
                  faults: Union[FaultModel, str, None] = None,
@@ -156,14 +276,29 @@ class ServingCluster:
         ``batched_train_cap`` overrides the decode-train length cap
         (``BatchedFleetLoop.TRAIN_CAP``), and ``batched_classb_path``
         selects the admission path (``"vector"`` default, ``"engine"``
-        for the real-step fallback)."""
+        for the real-step fallback).
+
+        ``hardware`` describes the fleet's accelerators: one spec or
+        registry name (homogeneous, the historical form), a per-node spec
+        list (``hardware=[A6000, H100, L4]``), or a fleet spec string
+        (``hardware="a6000,h100:2,l4"``). Per-node policies resolve
+        against their own node's spec; mixed fleets hand fleet policies
+        the full per-node list (the hierarchy coordinator water-fills
+        through per-spec power curves), and ``router`` may be a registry
+        name from :data:`ROUTERS` (``"energy"``, ``"least-loaded"``,
+        ``"round-robin"``, ``"length"``) or any callable."""
+        hw_list = parse_fleet_hardware(hardware, n_nodes)
+        self.hardware = hw_list
+        hetero = any(hw != hw_list[0] for hw in hw_list)
         engines = [InferenceEngine(model_cfg,
                                    engine_cfg or EngineConfig(),
-                                   hardware=hardware,
-                                   initial_frequency=hardware.f_max)
-                   for _ in range(n_nodes)]
+                                   hardware=hw,
+                                   initial_frequency=hw.f_max)
+                   for hw in hw_list]
         if isinstance(fleet_policy, str):
-            fleet_policy = get_policy(fleet_policy, hardware=hardware)
+            fleet_policy = get_policy(
+                fleet_policy,
+                hardware=hw_list if hetero else hw_list[0])
         if (fleet_policy is not None
                 and getattr(fleet_policy, "scope", "node") != "fleet"):
             raise ValueError(
@@ -179,18 +314,19 @@ class ServingCluster:
             raise ValueError(f"got {len(policies)} policies for "
                              f"{n_nodes} nodes")
         resolved = []
-        for spec in policies:
+        for node_hw, spec in zip(hw_list, policies):
             if isinstance(spec, str):
                 kw = ({"cfg": tuner_cfg}
                       if spec == "agft" and tuner_cfg is not None else {})
-                spec = get_policy(spec, hardware=hardware, **kw)
+                spec = get_policy(spec, hardware=node_hw, **kw)
             if spec is not None and getattr(spec, "scope", "node") == "fleet":
                 raise ValueError(
                     f"{type(spec).__name__} is fleet-scope; attach it via "
                     f"fleet_policy=, not per-node policies")
             resolved.append(spec)
         self.nodes = [EngineNode(e, p) for e, p in zip(engines, resolved)]
-        self.router = router
+        self.router = make_router(router) if isinstance(router, str) \
+            else router
         if isinstance(network, str):
             network = NetworkModel.from_spec(network)
         self.network = network
@@ -332,6 +468,19 @@ class ServingCluster:
             node_energy_j=[e.metrics.c.energy_joules_total
                            for e in engines],
         )
+        # per-hardware-tier accounting: joules and completions grouped by
+        # spec name (trivially one group on a homogeneous fleet)
+        out.node_hardware = [e.hardware.name for e in engines]
+        energy_by_tier: dict = {}
+        finished_by_tier: dict = {}
+        for e in engines:
+            tier = e.hardware.name
+            energy_by_tier[tier] = (energy_by_tier.get(tier, 0.0)
+                                    + e.metrics.c.energy_joules_total)
+            finished_by_tier[tier] = (finished_by_tier.get(tier, 0)
+                                      + len(e.finished))
+        out.energy_by_tier = energy_by_tier
+        out.finished_by_tier = finished_by_tier
         loop = self._loop
         if loop is not None and loop._power_cap is not None:
             out.power_cap_w = loop._power_cap

@@ -143,7 +143,7 @@ class SimBackend:
 
     def execute_mixed_vec(self, prefill_tokens, prefill_count,
                           prefill_ctx_sum, decode_seqs, decode_ctx_sum,
-                          terms):
+                          terms, hw=None):
         """Batched :meth:`execute` over per-node plan aggregates — the
         mixed prefill+decode pricing of the batched fleet backend's
         admission fast path.
@@ -156,6 +156,10 @@ class SimBackend:
         calls, the shared-weight-read subtraction on mixed iterations,
         and the same masking as the scalar branches — so per-node
         (dt, energy, power) is bit-for-bit the scalar result.
+
+        ``hw`` optionally carries per-row hardware-constant columns
+        (``repro.energy.hw_const_rows`` order) for mixed-hardware fleets;
+        the model cost side is fleet-homogeneous either way.
         """
         cost = self.cost
         has_pf = prefill_tokens > 0
@@ -174,7 +178,7 @@ class SimBackend:
         m2 = np.maximum(m2, 0.0)
         flops = np.where(has_pf, f1, 0.0) + np.where(has_de, f2, 0.0)
         mem = np.where(has_pf, m1, 0.0) + np.where(has_de, m2, 0.0)
-        t, p = self.dvfs.iteration_time_power_vec(flops, mem, terms)
+        t, p = self.dvfs.iteration_time_power_vec(flops, mem, terms, hw=hw)
         return t, p * t, p
 
 

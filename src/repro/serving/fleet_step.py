@@ -66,14 +66,22 @@ event-time single-stepping and stops on the exact step count, like
 across nodes follows event order, which for multi-node fleets matches
 the event loop's heap order up to same-instant ties).
 
+Heterogeneous *hardware* fleets are supported: each node carries its own
+``HardwareSpec`` (frequency-terms table per node; power/overhead scalars
+as per-node constant columns through the vectorized physics), and the
+result is bit-identical to the per-event loop on mixed fleets just as on
+homogeneous ones. Mixed AGFT fleets automatically take the facade path
+(``StackedAGFT.from_tuners`` refuses differing frequency grids).
+
 Unsupported shapes raise ``NotImplementedError`` at construction: network
 routing (in-flight deliveries), fleet policy + tick mode, non-Sim
-backends, heterogeneous model/hardware configs, ``max_num_seqs >
-max_batched_tokens`` (the decode-every-iteration invariant the finish
-heaps rely on), an active fault model (crash evacuation and re-routing
-need the event heap), and phase-disaggregated engines or policies
-(``freq_targets`` / ``phased = True`` — per-phase clocks need the
-per-event pricing path; see ``repro.policies.phased``).
+backends, heterogeneous *model* configs, an engine whose backend DVFS
+spec disagrees with its hardware, ``max_num_seqs > max_batched_tokens``
+(the decode-every-iteration invariant the finish heaps rely on), an
+active fault model (crash evacuation and re-routing need the event
+heap), and phase-disaggregated engines or policies (``freq_targets`` /
+``phased = True`` — per-phase clocks need the per-event pricing path;
+see ``repro.policies.phased``).
 """
 from __future__ import annotations
 
@@ -86,6 +94,7 @@ from repro.core.stacked import StackedAGFT
 from repro.serving.driver import (DEFAULT_FLEET_TICK_PERIOD_S,
                                   POLICY_TICK_MODES, EngineNode,
                                   _policy_period)
+from repro.energy.power_model import hw_const_rows
 from repro.serving.engine import SimBackend
 from repro.serving.request import RequestState
 
@@ -116,7 +125,7 @@ class _NodeFacade:
 
     @property
     def hardware(self):
-        return self._loop.hw
+        return self._loop.specs[self._i]
 
     @property
     def metrics(self) -> "_NodeFacade":
@@ -131,8 +140,9 @@ class _NodeFacade:
 
 class BatchedFleetLoop:
     """Drop-in for :class:`repro.serving.driver.EventLoop` over fleets of
-    homogeneous simulated engines (see module docstring). ``run()``
-    returns the number of engine steps, like ``EventLoop.run``."""
+    simulated engines sharing one model config — per-node hardware may
+    differ (see module docstring). ``run()`` returns the number of engine
+    steps, like ``EventLoop.run``."""
 
     def __init__(self, nodes: Sequence[EngineNode], *,
                  fleet_policy: Optional[object] = None,
@@ -174,10 +184,11 @@ class BatchedFleetLoop:
             if not isinstance(eng.backend, SimBackend):
                 raise NotImplementedError(
                     "step_mode='batched' requires SimBackend engines")
-            if eng.hardware != self.hw or eng.backend.dvfs.spec != self.hw:
+            if eng.backend.dvfs.spec != eng.hardware:
                 raise NotImplementedError(
-                    "step_mode='batched' requires a homogeneous fleet "
-                    "(identical HardwareSpec on every node)")
+                    "step_mode='batched' requires each engine's backend "
+                    "DVFS spec to match its hardware (mixed specs are "
+                    "fine; a mismatched engine is not)")
             if (eng.backend.cost.cfg != self.cost.cfg
                     or eng.backend.cost.bytes_per_el
                     != self.cost.bytes_per_el):
@@ -221,7 +232,24 @@ class BatchedFleetLoop:
         self.steps = 0
         self.now = 0.0
         self._round_hook = None          # test instrumentation: f(loop)
-        self.backend = e0.backend        # homogeneity-checked above
+        self.backend = e0.backend        # model-homogeneity-checked above
+        # --- per-node hardware (mixed fleets) -------------------------
+        # The frequency-response terms table is per-node (each node's own
+        # DVFSModel memo), and the power/overhead scalars become per-node
+        # constant columns threaded through the vectorized physics. On a
+        # homogeneous fleet every row holds the same values the scalar
+        # constants held, so the arithmetic is bit-identical.
+        self.specs = [eng.hardware for eng in self.engines]
+        self.dvfs_by_node = [eng.backend.dvfs for eng in self.engines]
+        self.hetero = any(sp != self.hw for sp in self.specs)
+        self.hw_consts = hw_const_rows(self.specs)
+        self.f_min_col = np.array([sp.f_min for sp in self.specs])
+        self.f_max_col = np.array([sp.f_max for sp in self.specs])
+        self.trans_j_col = np.array(
+            [sp.dvfs_transition_cost_j for sp in self.specs])
+        self.trans_s_col = np.array(
+            [sp.dvfs_transition_s for sp in self.specs])
+        self.p_idle_col = self.hw_consts[:, 0]
         #: real ``engine.step()`` calls (the retired classB fallback —
         #: stays 0 on the default vectorized path) and total admissions,
         #: so benchmarks can report real-steps-per-admitted-request
@@ -342,7 +370,7 @@ class BatchedFleetLoop:
         f = eng.frequency
         if f != self.freq[i] or not self.terms[i].any():
             self.freq[i] = f
-            self.terms[i] = self.dvfs._freq_terms(float(f))
+            self.terms[i] = self.dvfs_by_node[i]._freq_terms(float(f))
         self.prompt_tok[i] = c.prompt_tokens_total
         self.cached_tok[i] = c.cached_prompt_tokens_total
         self.gen_tok[i] = c.generation_tokens_total
@@ -458,7 +486,7 @@ class BatchedFleetLoop:
         f = eng.frequency
         if f != self.freq[i]:
             self.freq[i] = f
-            self.terms[i] = self.dvfs._freq_terms(float(f))
+            self.terms[i] = self.dvfs_by_node[i]._freq_terms(float(f))
 
     # ------------------------------------------------------------------
     # telemetry views
@@ -512,22 +540,28 @@ class BatchedFleetLoop:
     # actuation (engine.set_frequency semantics over arrays)
     # ------------------------------------------------------------------
     def _actuate(self, idx: np.ndarray, f: np.ndarray) -> None:
-        sp = self.hw
-        f = np.minimum(np.maximum(f, sp.f_min), sp.f_max)
+        # Per-node clamp and transition billing: on a homogeneous fleet
+        # every column holds the scalar spec's value, and adding a 0.0
+        # transition cost is a bitwise no-op for the non-negative energy
+        # and clock accumulators, so this is the identical arithmetic the
+        # scalar-spec version performed.
+        f = np.minimum(np.maximum(f, self.f_min_col[idx]),
+                       self.f_max_col[idx])
         ch = f != self.freq[idx]
         if ch.any():
             chi = idx[ch]
             self.trans[chi] += 1
-            if sp.dvfs_transition_cost_j > 0.0:
-                self.energy[chi] += sp.dvfs_transition_cost_j
-            if sp.dvfs_transition_s > 0.0:
-                self.clock[chi] += sp.dvfs_transition_s
-            self.terms[chi] = self.dvfs.freq_terms_array(f[ch])
+            self.energy[chi] += self.trans_j_col[chi]
+            self.clock[chi] += self.trans_s_col[chi]
+            fch = f[ch]
+            for j, i in enumerate(chi.tolist()):
+                self.terms[i] = self.dvfs_by_node[i]._freq_terms(
+                    float(fch[j]))
             self.dirty[chi] = True
         self.freq[idx] = f
 
     def _set_frequency_one(self, i: int, f_mhz: float) -> None:
-        sp = self.hw
+        sp = self.specs[i]
         f = min(max(f_mhz, sp.f_min), sp.f_max)
         if f != self.freq[i]:
             self.trans[i] += 1
@@ -535,7 +569,7 @@ class BatchedFleetLoop:
                 self.energy[i] += sp.dvfs_transition_cost_j
             if sp.dvfs_transition_s > 0.0:
                 self.clock[i] += sp.dvfs_transition_s
-            self.terms[i] = self.dvfs._freq_terms(float(f))
+            self.terms[i] = self.dvfs_by_node[i]._freq_terms(float(f))
             self.dirty[i] = True
         self.freq[i] = f
 
@@ -605,7 +639,8 @@ class BatchedFleetLoop:
             decode_seqs=D[:, None], avg_context=avg)
         mem = np.maximum(mem, 0.0)
         t, p = self.dvfs.iteration_time_power_vec(
-            flops, mem, self.terms[idx][:, None, :])
+            flops, mem, self.terms[idx][:, None, :],
+            hw=self.hw_consts[idx][:, None, :])
         cat = np.empty((k_n, Mm + 1))
         cat[:, 0] = self.clock[idx]
         cat[:, 1:] = t
@@ -731,7 +766,7 @@ class BatchedFleetLoop:
         engine's preemption scan is a guaranteed no-op before its blocked
         tick. Returns the number of engine steps taken (== len(b_idx);
         blocked ticks are steps too)."""
-        dvfs = self.dvfs
+        p_idle_l = self.p_idle_col
         r_node: List[int] = []
         r_clk: List[float] = []
         r_pf: List[list] = []
@@ -761,7 +796,7 @@ class BatchedFleetLoop:
                 dt = t_arr - clk
                 if dt < 0.0:
                     dt = 0.0
-                self.energy[i] += dvfs.idle_energy(dt)
+                self.energy[i] += p_idle_l[i] * dt
                 if t_arr > clk:
                     clk = t_arr
                 while pend and pend[0][0] <= clk:
@@ -818,7 +853,7 @@ class BatchedFleetLoop:
                 # empty plan <=> empty running set (see docstring): the
                 # engine burns a blocked millisecond at idle power — no
                 # metric writes, only the classification mirrors move
-                self.energy[i] += dvfs.idle_energy(1e-3)
+                self.energy[i] += p_idle_l[i] * 1e-3
                 self.clock[i] = clk + 1e-3
                 self.W[i] = len(sched.waiting)
                 self.pend[i] = len(pend)
@@ -846,7 +881,8 @@ class BatchedFleetLoop:
         t_v, e_v, p_v = self.backend.execute_mixed_vec(
             pf_tok_v, np.asarray(r_pf_cnt, np.int64),
             np.asarray(r_pf_ctx), dec_v,
-            np.asarray(r_dctx, np.int64), self.terms[rows])
+            np.asarray(r_dctx, np.int64), self.terms[rows],
+            hw=self.hw_consts[rows])
 
         # completion replay accumulates its per-row counter outcomes in
         # plain lists and commits them as one scatter per array below —

@@ -247,11 +247,46 @@ def test_network_model_rejected():
                        network="datacenter")
 
 
-def test_heterogeneous_hardware_rejected():
+def test_mismatched_backend_hardware_rejected():
+    """Mixed specs are supported; what stays rejected is an engine whose
+    backend DVFS model disagrees with its own ``hardware`` attribute
+    (the batched physics would bill the wrong power curve)."""
     cl = ServingCluster(CFG, n_nodes=2, step_mode="batched")
     cl.nodes[1].engine.hardware = A6000_MEASURED
-    with pytest.raises(NotImplementedError, match="homogeneous"):
+    with pytest.raises(NotImplementedError, match="DVFS spec"):
         cl.drain()
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous hardware: mixed specs drive the same SoA physics
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("tick", ["iteration", "tick"])
+def test_mixed_fleet_bit_identical(tick):
+    """3-node mixed fleet (A6000 + H100 + edge) with per-node AGFT loops:
+    batched and event backends must agree bit-for-bit, including the
+    nonzero-DVFS-transition-cost specs."""
+    a, b = drain_both(3, 30, tick=tick,
+                      hardware="a6000,h100,edge-orin",
+                      policies=["agft", "agft", "agft"])
+    assert b._loop.hetero
+    assert [sp.name for sp in b._loop.specs] == \
+        ["NVIDIA-A6000", "NVIDIA-H100", "EDGE-ORIN"]
+
+
+def test_mixed_fleet_routers_bit_identical():
+    """Routing policy composes with the batched backend on mixed fleets."""
+    for router in ("energy", "round-robin"):
+        drain_both(3, 31, hardware="h100,l4,a6000", router=router,
+                   with_tuners=False)
+
+
+def test_mixed_fleet_hierarchy_bit_identical():
+    """Per-spec waterfill tables + per-node band propagation through the
+    coordinator survive the batched fast path."""
+    drain_both(3, 32, hardware="a6000,a6000,l4",
+               fleet_policy="hierarchy",
+               policies=["agft", "agft", "agft"])
 
 
 def test_fleet_policy_with_tick_mode_rejected():
